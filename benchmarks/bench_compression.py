@@ -1,0 +1,81 @@
+"""Paper Fig. 2 + §5.1: compression ratio vs list length, real (Zipf,
+topic-correlated) vs randomized lists, Re-Pair vs the gap codecs.
+
+Reproduces the paper's claims:
+  * compressed size is NON-monotonic in list length (long lists compress
+    better per element),
+  * random lists compress WORSE than real ones (paper: 64.24 vs 48.24 MB,
+    ~25% penalty — correlation is a real but secondary source),
+  * Re-Pair beats byte codes on space (paper: 13% better).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import codecs as CD
+from repro.core.dictionary import build_forest
+from repro.core.optimize import optimize_rules
+from repro.core.repair import repair_compress
+from repro.index.corpus import randomize_lists
+
+from .common import corpus_lists, emit
+
+
+def total_bits_repair(lists) -> tuple[float, object]:
+    res = repair_compress(lists)
+    res, _ = optimize_rules(res)
+    forest = build_forest(res.grammar)
+    return float(forest.size_bits(res.seq.size)), res
+
+
+def run(num_docs=2000, vocab=5000) -> dict:
+    lists, u = corpus_lists(num_docs=num_docs, vocab_size=vocab)
+    n_post = sum(len(l) for l in lists)
+
+    rp_bits, res = total_bits_repair(lists)
+    rnd = randomize_lists(lists, u, seed=1)
+    rp_rand_bits, _ = total_bits_repair(rnd)
+
+    vb = CD.encode_lists(lists, "vbyte", universe=u).size_bits(False)
+    rice = CD.encode_lists(lists, "rice", universe=u).size_bits(False)
+    gamma = CD.encode_lists(lists, "gamma", universe=u).size_bits(False)
+    plain = n_post * int(np.ceil(np.log2(u)))
+
+    rows = [{
+        "method": m, "bits": b, "bits_per_posting": b / n_post,
+        "vs_plain": b / plain,
+    } for m, b in [("repair", rp_bits), ("repair_random", rp_rand_bits),
+                   ("vbyte", vb), ("rice", rice), ("gamma", gamma),
+                   ("plain", plain)]]
+    emit(rows, "fig2: space by method (real vs randomized lists)")
+
+    # Fig 2 left: compressed size vs original length (non-monotonicity)
+    by_len = []
+    for i in range(res.num_lists):
+        by_len.append({"orig_len": int(res.orig_lengths[i]),
+                       "compressed_syms": res.compressed_length(i)})
+    by_len.sort(key=lambda r: r["orig_len"])
+    # report deciles to keep the output small
+    dec = [by_len[int(q * (len(by_len) - 1))]
+           for q in np.linspace(0, 1, 11)]
+    emit(dec, "fig2-left: compressed symbols vs list length (deciles)")
+
+    checks = {
+        "random_worse_than_real": bool(rp_rand_bits > rp_bits),
+        "repair_beats_vbyte": bool(rp_bits < vb),
+        "random_penalty_pct": 100.0 * (rp_rand_bits / rp_bits - 1.0),
+        "repair_vs_vbyte_pct": 100.0 * (1.0 - rp_bits / vb),
+    }
+    emit([checks], "paper-claim checks (§5.1 / §5.2.1)")
+    return checks
+
+
+def main() -> None:
+    checks = run()
+    assert checks["random_worse_than_real"], "paper claim 2 failed"
+    assert checks["repair_beats_vbyte"], "paper claim 1 failed"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Paper Fig. 4 (left): time/space tradeoff — vary sampling density for
+Re-Pair (a)/(b) and byte codes; report (bits/posting, us/query) pairs for
+runs with 100 <= n/m <= 200 (the paper's window)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import codecs as CD
+from repro.core import intersect as I
+from repro.core.dictionary import build_forest
+from repro.core.repair import repair_compress
+from repro.core.sampling import build_a_sampling, build_b_sampling
+
+from .common import corpus_lists, emit, time_us
+
+
+def run() -> list[dict]:
+    lists, u = corpus_lists()
+    n_post = sum(len(l) for l in lists)
+    res = repair_compress(lists)
+    base_bits = build_forest(res.grammar).size_bits(res.seq.size)
+
+    rng = np.random.default_rng(1)
+    lens = np.asarray([len(l) for l in lists])
+    pairs = []
+    tries = 0
+    while len(pairs) < 40 and tries < 40000:
+        tries += 1
+        i, j = rng.integers(0, len(lists), 2)
+        if i == j:
+            continue
+        if lens[i] > lens[j]:
+            i, j = j, i
+        if 50 <= lens[j] / max(lens[i], 1) <= 400:
+            pairs.append((int(i), int(j)))
+
+    def bench(fn):
+        return float(np.mean([time_us(fn, i, j, repeat=1, number=3)
+                              for i, j in pairs]))
+
+    rows = []
+    comp_lens = np.asarray([res.compressed_length(i)
+                            for i in range(res.num_lists)])
+    for k in (4, 16, 64):
+        asamp = build_a_sampling(res, k=k)
+        bits = base_bits + asamp.size_bits(u)
+        rows.append({
+            "method": f"repair_svs_a{k}",
+            "bits_per_posting": bits / n_post,
+            "us_per_query": bench(
+                lambda i, j: I.intersect_svs(res, i, j, asamp, "exp")),
+        })
+    for B in (4, 16, 64):
+        bsamp = build_b_sampling(res, B=B)
+        bits = base_bits + bsamp.size_bits(u, comp_lens)
+        rows.append({
+            "method": f"repair_lookup_B{B}",
+            "bits_per_posting": bits / n_post,
+            "us_per_query": bench(
+                lambda i, j: I.intersect_lookup(res, i, j, bsamp)),
+        })
+    for k in (4, 16, 64):
+        enc = CD.encode_lists(lists, "vbyte", k=k, universe=u)
+        rows.append({
+            "method": f"vbyte_svs_k{k}",
+            "bits_per_posting": enc.size_bits() / n_post,
+            "us_per_query": bench(lambda i, j: CD.svs_encoded(lists[i], enc, j)),
+        })
+    for k in (4, 16, 64):
+        enc = CD.encode_lists(lists, "rice", k=k, universe=u)
+        rows.append({
+            "method": f"rice_svs_k{k}",
+            "bits_per_posting": enc.size_bits() / n_post,
+            "us_per_query": bench(lambda i, j: CD.svs_encoded(lists[i], enc, j)),
+        })
+    emit(rows, "fig4-left: time-space tradeoff (100<=n/m<=200 window)")
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    # Re-Pair variants use less space than the matching vbyte density
+    rp = min(r["bits_per_posting"] for r in rows if r["method"].startswith("repair"))
+    vb = min(r["bits_per_posting"] for r in rows if r["method"].startswith("vbyte"))
+    assert rp < vb
+
+
+if __name__ == "__main__":
+    main()

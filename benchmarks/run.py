@@ -1,0 +1,47 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  python -m benchmarks.run            # all benches
+  python -m benchmarks.run --only fig2,heights
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = {
+    "fig2": "benchmarks.bench_compression",
+    "heights": "benchmarks.bench_heights",
+    "fig3": "benchmarks.bench_intersection",
+    "fig4": "benchmarks.bench_tradeoff",
+    "hybrid": "benchmarks.bench_bitmap_hybrid",
+    "optimize": "benchmarks.bench_optimize",
+    "roofline": "benchmarks.roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(BENCHES))
+    failures = 0
+    for name in names:
+        mod_name = BENCHES[name]
+        print(f"\n{'='*70}\n== {name}  ({mod_name})\n{'='*70}")
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+            print(f"[{name}] ok in {time.perf_counter()-t0:.1f}s")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"[{name}] FAILED")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

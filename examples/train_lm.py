@@ -1,0 +1,81 @@
+"""End-to-end training driver: a ~100M-parameter decoder LM trained for a
+few hundred steps with the full substrate — sharded data pipeline,
+AdamW, atomic checkpointing, crash-exact resume, straggler telemetry.
+
+  PYTHONPATH=src python examples/train_lm.py                 # quick demo
+  PYTHONPATH=src python examples/train_lm.py --full --steps 300   # ~100M
+
+The --full config is a 12-layer d=768 GQA model (~104M params, GPT-2-small
+scale).  On this CPU container the demo config (~8M params) shows the loss
+curve in about a minute; the full config is the deliverable configuration.
+"""
+
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.data import DataConfig, ShardedTokenPipeline, SyntheticLMDataset
+from repro.models import transformer as T
+from repro.train.loop import Trainer, TrainConfig
+from repro.train.optimizer import AdamWConfig
+
+FULL = T.LMConfig(  # ~104M params
+    name="lm-100m", n_layers=12, d_model=768, n_heads=12, n_kv=4,
+    d_ff=2048, vocab=32768, head_dim=64, vocab_pad_to=256, kv_chunk=256)
+
+DEMO = T.LMConfig(  # ~8M params: same code path, minutes on CPU
+    name="lm-demo", n_layers=4, d_model=256, n_heads=4, n_kv=2,
+    d_ff=683, vocab=4096, head_dim=64, vocab_pad_to=256, kv_chunk=128)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    args = ap.parse_args()
+
+    cfg = FULL if args.full else DEMO
+    params = T.init_params(jax.random.key(0), cfg)
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{cfg.n_layers}L d={cfg.d_model}")
+
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      vocab=cfg.vocab)
+    pipe = ShardedTokenPipeline(SyntheticLMDataset(dcfg))
+
+    def loss_fn(p, batch):
+        return T.lm_loss(p, cfg, batch["tokens"], batch["targets"])
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="train_lm_")
+    tr = Trainer(
+        loss_fn, params, pipe,
+        opt_cfg=AdamWConfig(lr=3e-4, warmup_steps=20,
+                            total_steps=args.steps),
+        train_cfg=TrainConfig(total_steps=args.steps, ckpt_every=50,
+                              ckpt_dir=ckpt_dir, log_every=10))
+    print(f"checkpoints -> {ckpt_dir} (atomic, versioned; restart this "
+          f"script with --ckpt-dir to resume exactly)")
+    hist = tr.run()
+
+    import numpy as np
+    first = float(np.mean([h["loss"] for h in hist[:10]]))
+    last = float(np.mean([h["loss"] for h in hist[-10:]]))
+    toks = args.steps * args.batch * args.seq
+    mean_t = float(np.median([h["time_s"] for h in hist[5:]]))
+    print(f"\nloss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({toks/1e6:.2f}M tokens)")
+    print(f"median step {mean_t*1e3:.0f} ms "
+          f"({args.batch*args.seq/mean_t:.0f} tok/s on CPU); "
+          f"stragglers flagged: {len(tr.timer.flagged)}")
+    assert last < first, "loss must decrease"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Core of the reproduction: Re-Pair compression of inverted lists with
+skipping, sampling, and intersection — plus the TPU-facing flattened index
+(``jax_index``) and batched query engine (``batched``)."""
+
+from .repair import Grammar, RePairResult, repair_compress, lists_to_gap_stream
+from .dictionary import DictForest, build_forest, map_c_symbols
+from .optimize import optimize_rules, predict_sizes, truncate_rules
+from .sampling import ASampling, BSampling, build_a_sampling, build_b_sampling
+from . import intersect
+from . import codecs
+from . import bitmaps
+
+__all__ = [
+    "Grammar",
+    "RePairResult",
+    "repair_compress",
+    "lists_to_gap_stream",
+    "DictForest",
+    "build_forest",
+    "map_c_symbols",
+    "optimize_rules",
+    "predict_sizes",
+    "truncate_rules",
+    "ASampling",
+    "BSampling",
+    "build_a_sampling",
+    "build_b_sampling",
+    "intersect",
+    "codecs",
+    "bitmaps",
+]

@@ -1,0 +1,155 @@
+"""Device-resident form of the Re-Pair compressed inverted index.
+
+This is the TPU adaptation of the paper's query-time structures (DESIGN.md
+§2).  The host-side construction artifacts are flattened into fixed-width
+int32 arrays that support *vectorized* versions of the paper's operations:
+
+* the grammar becomes four symbol-indexed tables (``sym_left``, ``sym_right``,
+  ``sym_sum``, ``sym_len``) — the paper's observation that "the dictionary
+  ... can realistically fit in RAM" becomes *the dictionary fits in VMEM*;
+* the compressed sequence ``C`` stays one int32 stream with per-list spans;
+* the (b)-sampling becomes flattened bucket tables with a **static scan
+  bound** (max symbols overlapping one bucket) and a **static descent bound**
+  (max rule depth, O(log n) by §4) so every query runs the same instruction
+  sequence — a fixed-trip-count program, which is exactly what the VPU wants.
+
+Symbols are re-encoded densely: ids ``0..T-1`` are the distinct terminal gap
+values that actually occur (value table ``term_value``), ids ``T..T+R-1`` are
+rules.  This keeps tables small even when some gaps are huge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .repair import RePairResult
+from .sampling import BSampling, build_b_sampling, _phrase_sums_for
+
+INT_INF = np.int32(2**31 - 1)
+
+
+@dataclasses.dataclass
+class FlatIndex:
+    """All arrays are jnp int32 unless noted.  L lists, S symbols (dense
+    re-encoding), R rules, total C length N."""
+
+    # grammar tables (size S = num_dense_terminals + R)
+    sym_left: jax.Array     # child symbol id, -1 for terminals
+    sym_right: jax.Array
+    sym_sum: jax.Array      # phrase sum (terminal -> its gap value)
+    sym_len: jax.Array      # expanded length (terminal -> 1)
+    num_terminals: int      # dense terminal count T
+    max_depth: int          # static descent bound
+
+    # compressed stream
+    c: jax.Array            # (N,) dense symbol ids
+    starts: jax.Array       # (L+1,)
+    firsts: jax.Array       # (L,)
+    lengths: jax.Array      # (L,) uncompressed lengths
+    lasts: jax.Array        # (L,) last element of each list
+
+    # (b)-sampling, flattened
+    kbits: jax.Array        # (L,) per-list bucket shift
+    bucket_offsets: jax.Array  # (L+1,) into the two arrays below
+    bck_c_pos: jax.Array    # per-bucket symbol offset within the list span
+    bck_abs: jax.Array      # per-bucket absolute value before that symbol
+    max_scan: int           # static scan bound (symbols per bucket)
+
+    universe: int
+
+    def tree_flatten(self):
+        pass  # (not a pytree: static ints inside; pass arrays explicitly)
+
+
+def build_flat_index(res: RePairResult, B: int = 8,
+                     bsamp: BSampling | None = None) -> FlatIndex:
+    g = res.grammar
+    nt = g.num_terminals
+    R = g.num_rules
+
+    # Dense terminal re-encoding: find the distinct terminal values used in
+    # C or as rule children.
+    used_terms = set()
+    for s in np.unique(res.seq):
+        if s < nt:
+            used_terms.add(int(s))
+    for c in np.unique(g.rules.reshape(-1)) if R else []:
+        if c < nt:
+            used_terms.add(int(c))
+    term_values = np.asarray(sorted(used_terms), dtype=np.int64)
+    T = term_values.size
+    # map old symbol -> dense id
+    remap = {}
+    for i, v in enumerate(term_values):
+        remap[int(v)] = i
+    for r in range(R):
+        remap[nt + r] = T + r
+
+    def m(sym: int) -> int:
+        return remap[int(sym)]
+
+    S = T + R
+    sym_left = np.full(S, -1, dtype=np.int32)
+    sym_right = np.full(S, -1, dtype=np.int32)
+    sym_sum = np.zeros(S, dtype=np.int32)
+    sym_len = np.ones(S, dtype=np.int32)
+    sym_sum[:T] = term_values
+    for r in range(R):
+        l, rr = g.rules[r]
+        sym_left[T + r] = m(l)
+        sym_right[T + r] = m(rr)
+        sym_sum[T + r] = g.sums[r]
+        sym_len[T + r] = g.lengths[r]
+
+    c_dense = np.asarray([m(s) for s in res.seq], dtype=np.int32)
+
+    bs = bsamp or build_b_sampling(res, B)
+    kbits = np.asarray(bs.kbits, dtype=np.int32)
+    bucket_offsets = np.zeros(res.num_lists + 1, dtype=np.int32)
+    for i in range(res.num_lists):
+        bucket_offsets[i + 1] = bucket_offsets[i] + bs.c_pos[i].size
+    bck_c_pos = (np.concatenate(bs.c_pos) if res.num_lists else
+                 np.zeros(0)).astype(np.int32)
+    bck_abs = (np.concatenate(bs.abs_before) if res.num_lists else
+               np.zeros(0)).astype(np.int32)
+
+    # static scan bound: max symbols between consecutive bucket anchors,
+    # plus the tail from the final anchor to the end of the list span.
+    max_scan = 1
+    for i in range(res.num_lists):
+        cp = bs.c_pos[i]
+        span = res.compressed_length(i)
+        if cp.size > 1:
+            max_scan = max(max_scan, int(np.max(np.diff(cp))) + 1)
+        max_scan = max(max_scan, span - (int(cp[-1]) if cp.size else 0) + 1)
+
+    sums = _phrase_sums_for(res.seq, g)
+    lasts = np.empty(res.num_lists, dtype=np.int32)
+    for i in range(res.num_lists):
+        sp = slice(int(res.starts[i]), int(res.starts[i + 1]))
+        lasts[i] = int(res.first_values[i]) + int(sums[sp].sum())
+
+    return FlatIndex(
+        sym_left=jnp.asarray(sym_left),
+        sym_right=jnp.asarray(sym_right),
+        sym_sum=jnp.asarray(sym_sum),
+        sym_len=jnp.asarray(sym_len),
+        num_terminals=T,
+        max_depth=max(1, int(g.max_depth())),
+        c=jnp.asarray(c_dense),
+        starts=jnp.asarray(res.starts.astype(np.int32)),
+        firsts=jnp.asarray(res.first_values.astype(np.int32)),
+        lengths=jnp.asarray(res.orig_lengths.astype(np.int32)),
+        lasts=jnp.asarray(lasts),
+        kbits=jnp.asarray(kbits),
+        bucket_offsets=jnp.asarray(bucket_offsets),
+        bck_c_pos=jnp.asarray(bck_c_pos),
+        bck_abs=jnp.asarray(bck_abs),
+        max_scan=max_scan,
+        universe=int(res.universe),
+    )

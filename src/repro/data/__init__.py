@@ -1,0 +1,9 @@
+from .pipeline import (DataConfig, ShardedTokenPipeline, SyntheticLMDataset,
+                       PipelineCursor)
+
+__all__ = [
+    "DataConfig",
+    "ShardedTokenPipeline",
+    "SyntheticLMDataset",
+    "PipelineCursor",
+]

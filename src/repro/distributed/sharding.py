@@ -1,0 +1,143 @@
+"""Parameter/activation partition rules per architecture family.
+
+Megatron-style TP over ``model`` for transformer weights, DP over
+``data`` (× ``pod``), ZeRO-1 sharding of optimizer moments, row-sharded
+embedding tables for recsys, node/edge sharding for GNNs, sequence-sharded
+KV caches for decode (flash-decoding context parallelism).
+
+All rules are expressed as PartitionSpec-producing functions keyed by the
+param-tree path, so they work for both real arrays and ShapeDtypeStructs
+(the dry-run lowers against specs only).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# -- LM param rules -------------------------------------------------------------
+
+def lm_param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                  n_experts: int = 0, kv_replicate: bool = False) -> P:
+    """path is '/'-joined key path.  Layer-stacked params have a leading L
+    dim (never sharded).  ``kv_replicate`` keeps wk/wv whole per shard
+    (KV-head replication for n_kv < tp; DESIGN.md §4 / §Perf H7)."""
+    tp = _axis_size(mesh, "model")
+    if "embed" in path:
+        return P("model", None)
+    if "unembed" in path:
+        return P(None, "model")
+    if path.endswith(("ln1", "ln2", "ln_f", "q_norm", "k_norm", "q_a_norm",
+                      "kv_a_norm")):
+        return P(*([None] * len(shape)))
+    if "attn" in path:
+        if kv_replicate and any(path.endswith(k) for k in ("wk", "wv")):
+            return P(*([None] * len(shape)))
+        # (L, d, H*hd) column-parallel; wo (L, H*hd, d) row-parallel
+        if any(k in path for k in ("wq", "wk", "wv", "wq_a", "wq_b",
+                                   "wkv_a", "wkv_b")):
+            return P(None, None, "model")
+        if "wo" in path:
+            return P(None, "model", None)
+    if "ffn" in path:
+        if "router" in path:
+            return P(None, None, None)
+        is_expert = len(shape) == 4  # (L, E, d, f)
+        if is_expert:
+            if n_experts and n_experts % tp == 0:
+                return P(None, "model", None, None)      # expert parallel
+            # TP inside experts
+            if "w_down" in path:
+                return P(None, None, "model", None)
+            return P(None, None, None, "model")
+        if "w_down" in path:
+            return P(None, "model", None)
+        return P(None, None, "model")
+    return P(*([None] * len(shape)))
+
+
+def lm_cache_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                  batch: int) -> P:
+    """KV cache (L, B, S, ...): batch over data when divisible, cache
+    sequence over model (context parallel decode)."""
+    dp = dp_axes(mesh)
+    dp_total = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    bspec: Any = dp if (batch % max(dp_total, 1) == 0 and batch >= dp_total) \
+        else None
+    return P(None, bspec, "model", *([None] * (len(shape) - 3)))
+
+
+# -- generic helpers -------------------------------------------------------------
+
+def spec_tree(params: Any, rule, mesh: Mesh) -> Any:
+    """Apply a (path, shape, mesh) -> P rule over a pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        specs.append(rule(path, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shardings_for(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: shard optimizer moments further over the data axes by adding
+    'data' (and 'pod') to the first dim that is unsharded and divisible."""
+    dp = dp_axes(mesh)
+    if not dp:
+        return spec
+    dp_total = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dp_total == 0 and dim >= dp_total:
+            entries[i] = dp if len(dp) > 1 else dp[0]
+            return P(*entries)
+        if e is not None and not isinstance(e, tuple) and e == "model":
+            continue
+    return spec
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch: int | None = None) -> P:
+    """Shard dim 0 over the data axes (replicate if indivisible)."""
+    dp = dp_axes(mesh)
+    if batch is not None:
+        dp_total = int(np.prod([_axis_size(mesh, a) for a in dp]))
+        if batch % max(dp_total, 1) != 0 or batch < dp_total:
+            return P(*([None] * ndim))
+    lead: Any = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return P(lead, *([None] * (ndim - 1)))
+
+
+# -- GNN rules -------------------------------------------------------------------
+
+def gnn_param_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    # GCN weights are tiny: replicate.
+    return P(*([None] * len(shape)))
+
+
+# -- RecSys rules -----------------------------------------------------------------
+
+def recsys_param_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    if any(k in path for k in ("table", "item_emb")) and len(shape) == 2:
+        return P("model", None)      # row-sharded embedding tables
+    if "mlp_w" in path and len(shape) == 2 and shape[0] % _axis_size(
+            mesh, "model") == 0 and shape[0] >= 512:
+        return P("model", None)
+    return P(*([None] * len(shape)))

@@ -1,0 +1,12 @@
+from .corpus import SyntheticCorpus, zipf_corpus, pack_documents
+from .builder import InvertedIndex, build_index
+from .query import QueryEngine
+
+__all__ = [
+    "SyntheticCorpus",
+    "zipf_corpus",
+    "pack_documents",
+    "InvertedIndex",
+    "build_index",
+    "QueryEngine",
+]

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the query-time hot spots of the Re-Pair index.
+
+Four kernels (each: <name>.py pallas_call + BlockSpec, ops.py jit wrapper,
+ref.py pure-jnp oracle):
+
+* ``gap_decode``      — tiled exclusive-carry prefix sum: d-gaps -> doc ids.
+* ``grammar_expand``  — positional phrase expansion via fixed-depth descent;
+                        grammar tables live in VMEM (the paper's
+                        "dictionary fits in RAM" insight, one level down).
+* ``bucket_intersect``— domain-bucketed sorted-set intersection (the TPU
+                        adaptation of [ST07] lookup: aligned buckets of two
+                        lists intersect bucket-locally in VMEM).
+* ``bitmap_and``      — word-wise AND + popcount for the [MC07] hybrid.
+
+All validated on CPU with interpret=True against their refs; BlockSpecs are
+written for TPU v5e VMEM (tiles are multiples of (8, 128) lanes).
+"""

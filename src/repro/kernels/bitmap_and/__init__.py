@@ -1,0 +1,5 @@
+from .ops import bitmap_and, bitmap_and_count
+from .ref import bitmap_and_ref, bitmap_and_count_ref
+
+__all__ = ["bitmap_and", "bitmap_and_count", "bitmap_and_ref",
+           "bitmap_and_count_ref"]

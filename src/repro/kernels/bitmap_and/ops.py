@@ -1,0 +1,47 @@
+"""Jitted wrappers: flat word arrays -> padded 2D tiles -> kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .bitmap_and import TILE_C, TILE_R, bitmap_and_pallas
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_tiles(w: jax.Array) -> tuple[jax.Array, int]:
+    n = w.shape[0]
+    per_row = TILE_C
+    rows = -(-n // per_row)
+    rows_p = max(TILE_R, -(-rows // TILE_R) * TILE_R)
+    out = jnp.zeros((rows_p * per_row,), jnp.uint32).at[:n].set(w)
+    return out.reshape(rows_p, per_row), n
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def bitmap_and(a: jax.Array, b: jax.Array,
+               interpret: bool | None = None) -> jax.Array:
+    """a, b (N,) uint32 words -> (N,) uint32 AND."""
+    if interpret is None:
+        interpret = _should_interpret()
+    at, n = _to_tiles(a)
+    bt, _ = _to_tiles(b)
+    anded, _cnt = bitmap_and_pallas(at, bt, interpret=interpret)
+    return anded.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def bitmap_and_count(a: jax.Array, b: jax.Array,
+                     interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Returns (anded (N,) uint32, total popcount scalar int32)."""
+    if interpret is None:
+        interpret = _should_interpret()
+    at, n = _to_tiles(a)
+    bt, _ = _to_tiles(b)
+    anded, cnt = bitmap_and_pallas(at, bt, interpret=interpret)
+    return anded.reshape(-1)[:n], jnp.sum(cnt)

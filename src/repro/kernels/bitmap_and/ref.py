@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for bitmap_and."""
+
+import jax
+import jax.numpy as jnp
+
+
+def bitmap_and_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a & b
+
+
+def _popcount32(v: jax.Array) -> jax.Array:
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (v * jnp.uint32(0x01010101)) >> 24
+
+
+def bitmap_and_count_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.sum(_popcount32(a & b).astype(jnp.int32))

@@ -1,0 +1,4 @@
+from .ops import bucket_intersect
+from .ref import bucket_intersect_ref
+
+__all__ = ["bucket_intersect", "bucket_intersect_ref"]

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: domain-bucketed sorted-set intersection.
+
+The TPU-native adaptation of the paper's lookup strategy ([ST07] +
+§3.2 (b)-sampling): when both lists are laid out in aligned domain buckets
+(bucket b holds elements in [b·2^k, (b+1)·2^k), padded to a fixed capacity
+with INT_INF), bucket b of list A can only intersect bucket b of list B.
+Intersection becomes an embarrassingly parallel bucket-local all-pairs
+compare: match[i] = any_j (a[i] == b[j]) — a (CAP × CAP) boolean outer
+compare per bucket that maps straight onto the VPU; no sorting, no
+searching, no data-dependent control flow.
+
+Tile: TILE_B buckets × CAP lanes; the outer-compare intermediate is
+(TILE_B, CAP, CAP) bool — 8×128×128 = 128K lanes ≈ 0.5 MB as int8 in VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 8
+INT_INF = 2**31 - 1  # plain int: jnp array constants can't be captured
+
+
+def _bucket_intersect_kernel(a_ref, b_ref, out_ref):
+    a = a_ref[:, :]                      # (TILE_B, CAP)
+    b = b_ref[:, :]
+    eq = a[:, :, None] == b[:, None, :]  # (TILE_B, CAP, CAP)
+    hit = jnp.any(eq, axis=2) & (a != INT_INF)
+    out_ref[:, :] = jnp.where(hit, a, INT_INF)
+
+
+def bucket_intersect_pallas(a: jax.Array, b: jax.Array, *,
+                            interpret: bool = False) -> jax.Array:
+    """a, b (NB, CAP) int32 padded with INT_INF; NB % TILE_B == 0,
+    CAP % 128 == 0.  Returns (NB, CAP): elements of a also in b, INT_INF
+    elsewhere (position-stable, so output stays bucket-sorted)."""
+    NB, CAP = a.shape
+    grid = (NB // TILE_B,)
+    return pl.pallas_call(
+        _bucket_intersect_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, CAP), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B, CAP), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, CAP), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((NB, CAP), jnp.int32),
+        interpret=interpret,
+    )(a, b)

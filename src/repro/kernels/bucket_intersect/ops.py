@@ -1,0 +1,62 @@
+"""Jitted wrapper for bucket_intersect + the host-side bucketizer that
+turns a sorted id array into the aligned fixed-capacity bucket layout."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .bucket_intersect import TILE_B, bucket_intersect_pallas
+
+INT_INF = np.int32(2**31 - 1)
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def bucket_intersect(a: jax.Array, b: jax.Array,
+                     interpret: bool | None = None) -> jax.Array:
+    """a, b (NB, CAP) int32 INT_INF-padded aligned buckets -> (NB, CAP)."""
+    if interpret is None:
+        interpret = _should_interpret()
+    NB, CAP = a.shape
+    NBp = max(TILE_B, -(-NB // TILE_B) * TILE_B)
+    CAPp = max(128, -(-CAP // 128) * 128)
+    pad = lambda t: jnp.full((NBp, CAPp), INT_INF, jnp.int32).at[
+        :NB, :CAP].set(t.astype(jnp.int32))
+    return bucket_intersect_pallas(pad(a), pad(b), interpret=interpret)[
+        :NB, :CAP]
+
+
+def bucketize(ids: np.ndarray, universe: int, kbits: int,
+              cap: int | None = None) -> np.ndarray:
+    """Host-side layout: sorted ids -> (n_buckets, cap) int32, bucket b
+    holding ids in [b<<kbits, (b+1)<<kbits), INT_INF-padded.  ``cap``
+    defaults to the max bucket occupancy (a power-of-two-of-128 round-up
+    keeps lanes aligned)."""
+    ids = np.asarray(ids, dtype=np.int64)
+    nb = (universe >> kbits) + 1
+    bucket = (ids >> kbits).astype(np.int64)
+    counts = np.bincount(bucket, minlength=nb)
+    maxocc = int(counts.max(initial=1))
+    if cap is None:
+        cap = max(128, -(-maxocc // 128) * 128)
+    elif maxocc > cap:
+        raise ValueError(f"bucket occupancy {maxocc} exceeds cap {cap}")
+    out = np.full((nb, cap), INT_INF, dtype=np.int32)
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    for b in range(nb):
+        seg = ids[offs[b]:offs[b + 1]]
+        out[b, :seg.size] = seg
+    return out
+
+
+def unbucketize(mat: np.ndarray) -> np.ndarray:
+    flat = np.asarray(mat).reshape(-1)
+    return np.sort(flat[flat != INT_INF]).astype(np.int64)

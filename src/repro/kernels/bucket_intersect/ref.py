@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for bucket_intersect."""
+
+import jax
+import jax.numpy as jnp
+
+INT_INF = jnp.int32(2**31 - 1)
+
+
+def bucket_intersect_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    eq = a[:, :, None] == b[:, None, :]
+    hit = jnp.any(eq, axis=2) & (a != INT_INF)
+    return jnp.where(hit, a, INT_INF)

@@ -1,0 +1,4 @@
+from .ops import gap_decode
+from .ref import gap_decode_ref
+
+__all__ = ["gap_decode", "gap_decode_ref"]

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: batched d-gap -> absolute doc-id decode.
+
+Row r holds a stream of gaps; the output is the running inclusive prefix
+sum plus the row's base value (the list head).  The column dimension is
+tiled; a VMEM scratch carries the running sum across column tiles (grid
+iterations are sequential on a TensorCore, so the carry is race-free —
+the innermost grid dimension is the column-tile index).
+
+Block layout (v5e): gaps tile (TILE_R, TILE_C) int32 with TILE_R a
+multiple of 8 (sublanes) and TILE_C a multiple of 128 (lanes).  The
+cumsum itself runs on the VPU; arithmetic intensity is ~1 op/4B so the
+kernel is memory-bound by design — the point is to decode at HBM speed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_R = 8
+TILE_C = 512
+
+
+def _gap_decode_kernel(firsts_ref, gaps_ref, out_ref, carry_ref):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        carry_ref[:, :] = firsts_ref[:, :]
+
+    g = gaps_ref[:, :]
+    c = jnp.cumsum(g, axis=1)
+    out_ref[:, :] = c + carry_ref[:, :]
+    carry_ref[:, :] = carry_ref[:, :] + c[:, -1:]
+
+
+def gap_decode_pallas(gaps: jax.Array, firsts: jax.Array, *,
+                      interpret: bool = False) -> jax.Array:
+    """gaps (R, C) int32 (C % TILE_C == 0, R % TILE_R == 0),
+    firsts (R, 1) int32 -> (R, C) absolute values."""
+    R, C = gaps.shape
+    grid = (R // TILE_R, C // TILE_C)
+    return pl.pallas_call(
+        _gap_decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_R, 1), lambda r, c: (r, 0)),
+            pl.BlockSpec((TILE_R, TILE_C), lambda r, c: (r, c)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R, TILE_C), lambda r, c: (r, c)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((TILE_R, 1), jnp.int32)],
+        interpret=interpret,
+    )(firsts, gaps)

@@ -1,0 +1,36 @@
+"""Jitted public wrapper for gap_decode: pads to tile multiples, picks
+interpret mode automatically off-TPU."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .gap_decode import TILE_C, TILE_R, gap_decode_pallas
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def gap_decode(gaps: jax.Array, firsts: jax.Array,
+               interpret: bool | None = None) -> jax.Array:
+    """gaps (R, C) int32, firsts (R,) or (R,1) int32 -> (R, C) absolute ids.
+
+    Pads rows to TILE_R and columns to TILE_C (pad gaps are 0 so the prefix
+    sum is unaffected); slices the result back.
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    if firsts.ndim == 1:
+        firsts = firsts[:, None]
+    R, C = gaps.shape
+    Rp = -(-R // TILE_R) * TILE_R
+    Cp = -(-C // TILE_C) * TILE_C
+    g = jnp.zeros((Rp, Cp), jnp.int32).at[:R, :C].set(gaps.astype(jnp.int32))
+    f = jnp.zeros((Rp, 1), jnp.int32).at[:R].set(firsts.astype(jnp.int32))
+    out = gap_decode_pallas(g, f, interpret=interpret)
+    return out[:R, :C]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for gap_decode."""
+
+import jax
+import jax.numpy as jnp
+
+
+def gap_decode_ref(gaps: jax.Array, firsts: jax.Array) -> jax.Array:
+    """gaps (R, C) int32, firsts (R, 1) int32 -> (R, C) int32 absolute
+    values: out[r, t] = firsts[r] + sum(gaps[r, :t+1])."""
+    return jnp.cumsum(gaps, axis=1) + firsts

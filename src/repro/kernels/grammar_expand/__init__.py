@@ -1,0 +1,4 @@
+from .ops import grammar_expand
+from .ref import grammar_expand_ref
+
+__all__ = ["grammar_expand", "grammar_expand_ref"]

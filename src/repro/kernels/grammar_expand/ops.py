@@ -1,0 +1,39 @@
+"""Jitted public wrapper for grammar_expand: pads the symbol stream to
+TILE_W and the tables to a lane multiple; truncation guard for phrases
+longer than PHRASE_CAP is the caller's job (build_flat_index enforces a
+rule-length cap when targeting this kernel)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .grammar_expand import PHRASE_CAP, TILE_W, grammar_expand_pallas
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("max_depth", "interpret"))
+def grammar_expand(syms: jax.Array, left: jax.Array, right: jax.Array,
+                   sums: jax.Array, lens: jax.Array, *, max_depth: int,
+                   interpret: bool | None = None) -> jax.Array:
+    """syms (W,) int32 symbol ids; tables (S,) int32 (left/right = -1 for
+    terminals; sums = phrase sum / terminal gap; lens = expanded length).
+    Returns (W, PHRASE_CAP) int32 gaps, rows zero-padded."""
+    if interpret is None:
+        interpret = _should_interpret()
+    W = syms.shape[0]
+    S = left.shape[0]
+    Wp = max(TILE_W, -(-W // TILE_W) * TILE_W)
+    Sp = max(128, -(-S // 128) * 128)
+    syms_p = jnp.zeros(Wp, jnp.int32).at[:W].set(syms.astype(jnp.int32))
+    pad = lambda t, fill: jnp.full(Sp, fill, jnp.int32).at[:S].set(
+        t.astype(jnp.int32))
+    out = grammar_expand_pallas(
+        syms_p, pad(left, -1), pad(right, -1), pad(sums, 0),
+        pad(lens, 1), max_depth=max_depth, interpret=interpret)
+    return out[:W]

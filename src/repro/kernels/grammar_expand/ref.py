@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for grammar_expand (same positional-descent semantics,
+expressed with plain vmapped gathers)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("max_depth", "phrase_cap"))
+def grammar_expand_ref(syms: jax.Array, left: jax.Array, right: jax.Array,
+                       sums: jax.Array, lens: jax.Array, *,
+                       max_depth: int, phrase_cap: int) -> jax.Array:
+    """syms (W,) -> (W, phrase_cap) int32: row w holds the gaps of symbol
+    syms[w], zero-padded past its expanded length."""
+    W = syms.shape[0]
+    sym = jnp.repeat(syms, phrase_cap)
+    want = jnp.tile(jnp.arange(1, phrase_cap + 1, dtype=jnp.int32), W)
+    valid = want <= lens[sym]
+
+    def body(_, state):
+        sym, want = state
+        l = left[sym]
+        is_rule = l >= 0
+        r = right[sym]
+        ll = lens[jnp.maximum(l, 0)]
+        go_left = want <= ll
+        nsym = jnp.where(go_left, l, r)
+        nwant = jnp.where(go_left, want, want - ll)
+        return (jnp.where(is_rule, nsym, sym),
+                jnp.where(is_rule, nwant, want))
+
+    sym_f, _ = jax.lax.fori_loop(0, max_depth, body, (sym, want))
+    gaps = sums[sym_f]
+    return jnp.where(valid, gaps, 0).reshape(W, phrase_cap)

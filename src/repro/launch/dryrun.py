@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any jax import/init: jax locks the device count on
+# first backend initialization (system-prompt contract for the dry-run).
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes and extract the roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all                 # 40 cells + repair-ir
+  python -m repro.launch.dryrun --all --multi-pod     # (2,16,16) pass
+  python -m repro.launch.dryrun --all --out results.json
+
+Single pod:  (data=16, model=16)         = 256 chips
+Multi pod:   (pod=2, data=16, model=16)  = 512 chips
+
+The compile must SUCCEED for every cell on both meshes; sharding
+mismatches / compile OOMs are bugs in the framework (system contract).
+The roofline table in EXPERIMENTS.md §Roofline is produced from the
+single-pod pass; the multi-pod pass proves the ``pod`` axis shards.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from .mesh import make_production_mesh
+from .hlo_analysis import roofline_from_compiled, RooflineTerms
+from .specs import all_cells, build_lowering_spec
+from ..configs import get_arch
+
+
+def model_flops_for(arch_name: str, shape_name: str) -> float:
+    """6·N·D useful-FLOPs accounting (per whole step, fwd+bwd for train,
+    fwd for serve).  Non-LM families report 0 (no 6ND convention)."""
+    arch = get_arch(arch_name)
+    if arch.family != "lm":
+        return 0.0
+    cfg = arch.config
+    shape = arch.shape(shape_name)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.params["batch"] * shape.params["seq"]
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.params["batch"] * shape.params["seq"]
+        return 2.0 * n_active * toks
+    # decode: one token per lane
+    return 2.0 * n_active * shape.params["batch"]
+
+
+def _compile_spec(spec, mesh):
+    with mesh:
+        lowered = jax.jit(
+            spec.fn,
+            in_shardings=spec.in_shardings,
+            out_shardings=spec.out_shardings,
+            donate_argnums=spec.donate_argnums,
+        ).lower(*spec.args)
+        return lowered.compile()
+
+
+def lm_exact_terms(arch: str, shape: str, mesh, n_dev: int,
+                   l_full: int, variant: str = "baseline"
+                   ) -> "RooflineTerms":
+    """XLA's HLO cost analysis counts a while-loop body ONCE, so the
+    scanned L-layer program under-reports flops/bytes by ~L×.  We recover
+    exact whole-program costs by compiling the model UNROLLED at two small
+    layer counts (L=2, L=4) and extrapolating the (exactly linear-in-L)
+    costs to the full depth: cost(L) = base + L·per_layer.  Memory analysis
+    still comes from the full scanned compile (real buffer assignment)."""
+    import dataclasses as _dc
+    samples = {}
+    for l_small in (2, 4):
+        spec = build_lowering_spec(arch, shape, mesh, unroll=True,
+                                   n_layers_override=l_small,
+                                   variant=variant)
+        compiled = _compile_spec(spec, mesh)
+        samples[l_small] = roofline_from_compiled(compiled, n_dev)
+    t2, t4 = samples[2], samples[4]
+
+    def extrap(a2: float, a4: float) -> float:
+        per_layer = (a4 - a2) / 2.0
+        base = a2 - 2.0 * per_layer
+        return base + l_full * per_layer
+
+    flops = extrap(t2.flops, t4.flops)
+    hbm = extrap(t2.hbm_bytes, t4.hbm_bytes)
+    wire = extrap(t2.wire_bytes, t4.wire_bytes)
+    from .hlo_analysis import PEAK_FLOPS, HBM_BW, ICI_BW, RooflineTerms
+    mf = model_flops_for(arch, shape)
+    compute_s, memory_s, coll_s = (flops / PEAK_FLOPS, hbm / HBM_BW,
+                                   wire / ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm, wire_bytes=wire, num_devices=n_dev,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        bottleneck=max(terms, key=terms.get), model_flops=mf,
+        useful_ratio=(mf / (flops * n_dev) if flops else 0.0),
+        collectives={k: {"count": v["count"], "wire_bytes": extrap(
+            t2.collectives.get(k, {"wire_bytes": 0})["wire_bytes"],
+            v["wire_bytes"])} for k, v in t4.collectives.items()},
+    )
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
+             exact_lm: bool = False, variant: str = "baseline") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(len(mesh.devices.reshape(-1)))
+    t0 = time.perf_counter()
+    spec = build_lowering_spec(arch, shape, mesh, variant=variant)
+    with mesh:
+        lowered = jax.jit(
+            spec.fn,
+            in_shardings=spec.in_shardings,
+            out_shardings=spec.out_shardings,
+            donate_argnums=spec.donate_argnums,
+        ).lower(*spec.args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    if exact_lm and get_arch(arch).family == "lm":
+        terms = lm_exact_terms(arch, shape, mesh, n_dev,
+                               get_arch(arch).config.n_layers, variant)
+    else:
+        terms = roofline_from_compiled(
+            compiled, n_dev, model_flops=model_flops_for(arch, shape))
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "temp_size_in_bytes", 0))
+            + int(getattr(mem, "argument_size_in_bytes", 0)),
+        },
+        "roofline": terms.summary(),
+        "status": "ok",
+    }
+    if verbose:
+        m = rec["memory"]
+        r = rec["roofline"]
+        print(f"[{arch} × {shape} @ {rec['mesh']}] compile ok "
+              f"({rec['compile_s']}s)")
+        print(f"  bytes/device: args {m['argument_bytes']/2**30:.2f}GiB "
+              f"temps {m['temp_bytes']/2**30:.2f}GiB")
+        print(f"  roofline: compute {r['compute_s']*1e3:.2f}ms | "
+              f"memory {r['memory_s']*1e3:.2f}ms | "
+              f"collective {r['collective_s']*1e3:.2f}ms "
+              f"-> {r['bottleneck']}-bound")
+        if r["model_flops"]:
+            print(f"  useful-FLOPs ratio 6ND/HLO: {r['useful_ratio']:.2f}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-repair-ir", action="store_true")
+    ap.add_argument("--exact-lm", action="store_true",
+                    help="recover exact LM costs via unrolled small-L "
+                         "extrapolation (3 compiles per LM cell)")
+    ap.add_argument("--variant", type=str, default="baseline",
+                    choices=("baseline", "opt"))
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells(include_repair_ir=not args.skip_repair_ir)
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    failures = 0
+    for mp in meshes:
+        for arch, shape in cells:
+            try:
+                results.append(run_cell(arch, shape, mp,
+                                        exact_lm=args.exact_lm,
+                                        variant=args.variant))
+            except Exception as e:  # a failure here is a framework bug
+                failures += 1
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "status": f"FAIL: {type(e).__name__}: {e}"})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {len(results)} records to {args.out}")
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    print(f"\n{ok}/{len(results)} cells compiled")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+``compiled.cost_analysis()`` gives HLO FLOPs and bytes accessed;
+collective traffic is NOT in cost_analysis, so we parse the optimized HLO
+text and sum wire bytes per collective with the standard ring-algorithm
+formulas (per participating device):
+
+  all-reduce      2 · out_bytes · (k-1)/k
+  all-gather      out_bytes · (k-1)/k          (output = gathered size)
+  reduce-scatter  out_bytes · (k-1)            (input = k · output)
+  all-to-all      out_bytes · (k-1)/k
+  collective-permute  out_bytes                (point-to-point)
+
+k is the replica-group size parsed from ``replica_groups``.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (DESIGN.md hardware constants).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12         # bf16 per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# result shape of an HLO op:  "%name = bf16[4,128]{1,0} all-gather(...)"
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([\d,]*)\][^)]*?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_TUPLE_COLLECTIVE_RE = re.compile(
+    r"=\s*\((.*?)\)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota form [num_groups,group_size]<=[total]
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0            # per-device, summed over ops
+    op_counts: dict = dataclasses.field(default_factory=dict)
+    op_bytes: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, op: str, b: float) -> None:
+        self.wire_bytes += b
+        self.op_counts[op] = self.op_counts.get(op, 0) + 1
+        self.op_bytes[op] = self.op_bytes.get(op, 0.0) + b
+
+
+def parse_collectives(hlo_text: str, num_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done: set[str] = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # paired with -start; count once
+        m = _COLLECTIVE_RE.search(line)
+        shapes: list[tuple[str, str]] = []
+        op = None
+        if m:
+            op = m.group(3)
+            shapes = [(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_COLLECTIVE_RE.search(line)
+            if mt:
+                op = mt.group(2)
+                shapes = _SHAPE_RE.findall(mt.group(1))
+        if not op:
+            continue
+        out_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+        k = _group_size(line, num_devices)
+        if k <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * out_bytes * (k - 1) / k
+        elif op == "all-gather":
+            wire = out_bytes * (k - 1) / k
+        elif op == "reduce-scatter":
+            wire = out_bytes * (k - 1)
+        elif op == "all-to-all":
+            wire = out_bytes * (k - 1) / k
+        else:  # collective-permute
+            wire = float(out_bytes)
+        stats.add(op, wire)
+    return stats
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # total HLO flops (whole program)
+    hbm_bytes: float             # total bytes accessed
+    wire_bytes: float            # per-device collective wire bytes
+    num_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0     # 6·N·D useful flops (LM families)
+    useful_ratio: float = 0.0    # model_flops / hlo_flops
+    collectives: dict = dataclasses.field(default_factory=dict)
+    per_device_hbm_bytes: float = 0.0
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "collectives": self.collectives,
+        }
+
+
+def roofline_from_compiled(compiled, num_devices: int,
+                           model_flops: float = 0.0) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    # cost_analysis reports PER-PARTITION numbers for SPMD programs (the
+    # executable is one partition's program); model_flops is global, so the
+    # useful ratio normalizes by num_devices.
+    stats = parse_collectives(compiled.as_text(), num_devices)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = stats.wire_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm, wire_bytes=stats.wire_bytes,
+        num_devices=num_devices, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / (flops * num_devices)
+                      if flops else 0.0),
+        collectives={k: {"count": stats.op_counts[k],
+                         "wire_bytes": stats.op_bytes[k]}
+                     for k in stats.op_counts},
+    )

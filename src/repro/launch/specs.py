@@ -1,0 +1,765 @@
+"""Per-(architecture × shape) step functions, input ShapeDtypeStructs and
+sharding specs for the production dry-run.
+
+For every cell this module returns a ``LoweringSpec``:
+
+* ``fn``            — the step to lower (train_step / prefill / serve_step /
+                      retrieval / ir-engine program),
+* ``args``          — ShapeDtypeStruct pytree (weak-type-correct, shardable,
+                      never allocated),
+* ``in_shardings`` / ``out_shardings`` — NamedShardings on the given mesh.
+
+Conventions (DESIGN.md §4):
+* batch dims shard over ('pod','data') when present, else 'data';
+* LM params: Megatron TP over 'model' (+ vocab over 'model'); KV caches
+  shard the *cache sequence* over 'model' (context-parallel decode);
+* MoE: expert-parallel over 'model' when E %% tp == 0, else TP inside
+  experts;
+* GNN: nodes/edges shard over the data axes, weights replicated;
+* RecSys: embedding tables row-shard over 'model', batch over data axes;
+* repair-ir: the FlatIndex arrays (C, buckets) shard over 'model'; the
+  grammar tables are replicated (they are the "dictionary fits in RAM"
+  asset); query batches shard over the data axes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_arch
+from ..configs.base import ArchSpec, ShapeSpec
+from ..distributed.sharding import (batch_spec, dp_axes, lm_param_spec,
+                                    lm_cache_spec, recsys_param_spec,
+                                    spec_tree, shardings_for, zero1_spec)
+from ..models import gnn as G
+from ..models import recsys as R
+from ..models import transformer as T
+from ..models.layers import Dtype
+from ..train.optimizer import (AdamWConfig, OptState, adamw_update,
+                               init_opt_state_shape)
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    static_argnums: tuple = ()
+    donate_argnums: tuple = ()   # state buffers updated in place (params/
+    #                              opt in train, KV cache in decode)
+
+
+def _named(mesh: Mesh, spec_pytree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_pytree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_total(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+# =============================================================================
+# LM family
+# =============================================================================
+
+def _lm_cfg_for_shape(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                      unroll: bool = False,
+                      n_layers_override: int | None = None,
+                      variant: str = "baseline") -> T.LMConfig:
+    cfg: T.LMConfig = arch.config
+    if n_layers_override is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers_override)
+    if shape.kind == "long_decode":
+        cfg = dataclasses.replace(cfg, window=shape.params["window"])
+    dp = dp_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    # MoE dispatch groups = the data-parallel extent when it divides the
+    # token count (decode at tiny batch falls back to fewer groups).
+    tokens = shape.params["batch"] * shape.params.get("seq", 1)
+    if shape.kind in ("decode", "long_decode"):
+        tokens = shape.params["batch"]
+    groups = _dp_total(mesh)
+    while tokens % groups != 0:
+        groups //= 2
+    cfg = dataclasses.replace(cfg, dp_spec=dp_spec, tp_axis="model",
+                              sp_axis="model", unroll_layers=unroll,
+                              moe_groups=max(groups, 1), mesh=mesh)
+    if variant == "opt":  # §Perf beyond-baseline configuration
+        # NOTE: two sharding pins were tried and REFUTED (§Perf iteration
+        # log): pinning the flash carry (H4) and pinning the kv-chunk xs
+        # (H6) both fight the partitioner's placement and regress 30-70%.
+        # ep_pad is gated to train/prefill: at decode batch the per-layer
+        # weight-padding concat dominates the tiny step (+168% measured
+        # on granite long_500k) — §Perf full-sweep note.
+        ep = shape.kind in ("train", "prefill")
+        cfg = dataclasses.replace(cfg, bf16_combine=True,
+                                  flash_p_bf16=True, moe_ep_pad=ep)
+    return cfg
+
+
+def _lm_param_shardings(cfg: T.LMConfig, mesh: Mesh,
+                        variant: str = "baseline") -> Any:
+    pshape = T.init_params_shape(cfg)
+    # §Perf H7 (opt variant): when kv heads < tp, sharding wk/wv splits
+    # single kv heads across shards and the partitioner gathers the whole
+    # repeated KV per flash chunk (~60% of the train-shape AG wire).
+    # Replicating wk/wv instead computes KV redundantly per shard — 21
+    # MB/layer of weights and <1% extra flops for zero KV collectives
+    # (DESIGN.md §4 "KV-head replication").
+    # measured NEUTRAL at qwen3 train_4k (the partitioner's kv gathers
+    # persist either way — §Perf iteration log H7); kept selectable under
+    # the explicit "opt-kvrep" variant, off in "opt".
+    kv_rep = (variant == "opt-kvrep" and cfg.attn == "gqa"
+              and cfg.n_kv < mesh.shape["model"])
+    rule = partial(lm_param_spec, n_experts=cfg.n_experts,
+                   kv_replicate=kv_rep)
+    specs = spec_tree(pshape, lambda p, s, m: rule(p, s, m), mesh)
+    return pshape, _named(mesh, specs), specs
+
+
+def lm_train_spec(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                  unroll: bool = False,
+                  n_layers_override: int | None = None,
+                  variant: str = "baseline") -> LoweringSpec:
+    cfg = _lm_cfg_for_shape(arch, shape, mesh, unroll, n_layers_override,
+                            variant)
+    B, S = shape.params["batch"], shape.params["seq"]
+    pshape, pshard, pspecs = _lm_param_shardings(cfg, mesh, variant)
+    oshape = init_opt_state_shape(pshape)
+    ospecs = OptState(
+        mu=jax.tree.map(lambda sds, sp: zero1_spec(sp, sds.shape, mesh),
+                        pshape, pspecs,
+                        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P))),
+        nu=jax.tree.map(lambda sds, sp: zero1_spec(sp, sds.shape, mesh),
+                        pshape, pspecs,
+                        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P))),
+        count=P(),
+    )
+    oshard = _named(mesh, ospecs)
+    bspec = batch_spec(mesh, 2, B)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    bshard = {k: NamedSharding(mesh, bspec) for k in batch}
+    opt_cfg = AdamWConfig(bf16_update_gather=cfg.bf16_combine)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return T.lm_loss(p, cfg, batch["tokens"], batch["targets"])
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        # pin gradient layout to the parameter layout — without this the
+        # partitioner may replicate the stacked per-layer grad accumulator
+        # inside the backward scan (150 GiB/device on phi3.5-moe)
+        grads = jax.lax.with_sharding_constraint(grads, pshard)
+        params, opt_state, metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    mshard = {k: NamedSharding(mesh, P()) for k in
+              ("grad_norm", "lr", "loss")}
+    return LoweringSpec(
+        fn=train_step,
+        args=(pshape, oshape, batch),
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, mshard),
+        donate_argnums=(0, 1),
+    )
+
+
+def lm_prefill_spec(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                    unroll: bool = False,
+                    n_layers_override: int | None = None,
+                    variant: str = "baseline") -> LoweringSpec:
+    cfg = _lm_cfg_for_shape(arch, shape, mesh, unroll, n_layers_override,
+                            variant)
+    B, S = shape.params["batch"], shape.params["seq"]
+    pshape, pshard, _ = _lm_param_shardings(cfg, mesh, variant)
+    tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    tshard = NamedSharding(mesh, batch_spec(mesh, 2, B))
+    cache_shape = T.init_cache_shape(cfg, B, S)
+    cshard = _named(mesh, jax.tree.map(
+        lambda sds: lm_cache_spec("", sds.shape, mesh, B), cache_shape))
+    lshard = NamedSharding(mesh, batch_spec(mesh, 2, B))
+
+    def prefill_step(params, tokens):
+        return T.prefill(params, cfg, tokens)
+
+    return LoweringSpec(
+        fn=prefill_step,
+        args=(pshape, tokens),
+        in_shardings=(pshard, tshard),
+        out_shardings=(lshard, cshard),
+    )
+
+
+def lm_decode_spec(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                   unroll: bool = False,
+                   n_layers_override: int | None = None,
+                   variant: str = "baseline") -> LoweringSpec:
+    cfg = _lm_cfg_for_shape(arch, shape, mesh, unroll, n_layers_override,
+                            variant)
+    B = shape.params["batch"]
+    # long_500k decodes against a ring cache of ``window`` slots — the
+    # sub-quadratic path; decode_32k against the full 32k cache.
+    s_cache = (cfg.window if shape.kind == "long_decode"
+               else shape.params["seq"])
+    pshape, pshard, _ = _lm_param_shardings(cfg, mesh, variant)
+    cache_shape = T.init_cache_shape(cfg, B, s_cache)
+    cshard = _named(mesh, jax.tree.map(
+        lambda sds: lm_cache_spec("", sds.shape, mesh, B), cache_shape))
+    bspec = batch_spec(mesh, 1, B)
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    vshard = NamedSharding(mesh, bspec)
+
+    def serve_step(params, token, cache, position):
+        return T.decode_step(params, cfg, token, cache, position)
+
+    lshard = NamedSharding(mesh, batch_spec(mesh, 2, B))
+    return LoweringSpec(
+        fn=serve_step,
+        args=(pshape, token, cache_shape, pos),
+        in_shardings=(pshard, vshard, cshard, vshard),
+        out_shardings=(lshard, cshard),
+        donate_argnums=(2,),
+    )
+
+
+# =============================================================================
+# GNN family
+# =============================================================================
+
+_GNN_SHAPE_DIMS = {
+    # shape -> (d_feat, n_classes)
+    "full_graph_sm": (1433, 7),
+    "minibatch_lg": (602, 41),
+    "ogb_products": (100, 47),
+    "molecule": (64, 16),
+}
+
+
+def _gnn_cfg_for_shape(arch: ArchSpec, shape: ShapeSpec) -> G.GCNConfig:
+    d_feat, n_classes = _GNN_SHAPE_DIMS[shape.name]
+    return dataclasses.replace(arch.config, d_feat=d_feat,
+                               n_classes=n_classes)
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def gnn_full_graph_spec(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh
+                        ) -> LoweringSpec:
+    cfg = _gnn_cfg_for_shape(arch, shape)
+    if shape.kind == "molecule":
+        N = shape.params["n_nodes"] * shape.params["batch"]
+        E = shape.params["n_edges"] * shape.params["batch"]
+    else:
+        N, E = shape.params["n_nodes"], shape.params["n_edges"]
+    # Pad node/edge counts to the data-parallel extent (padding edges are
+    # self-loops with zero norm; padding nodes are masked out of the loss —
+    # the real loaders pad identically).
+    dp = _dp_total(mesh)
+    N, E = _pad_to(N, dp), _pad_to(E, dp)
+    pshape = jax.eval_shape(lambda k: G.init_params(k, cfg),
+                            jax.random.key(0))
+    pshard = _named(mesh, jax.tree.map(
+        lambda sds: P(*([None] * len(sds.shape))), pshape))
+    oshape = init_opt_state_shape(pshape)
+    oshard = _named(mesh, jax.tree.map(
+        lambda sds: P(*([None] * len(sds.shape))), oshape))
+    dspec = batch_spec(mesh, 1)
+    args = (
+        pshape, oshape,
+        jax.ShapeDtypeStruct((N, cfg.d_feat), jnp.float32),   # feats
+        jax.ShapeDtypeStruct((E,), jnp.int32),                # src
+        jax.ShapeDtypeStruct((E,), jnp.int32),                # dst
+        jax.ShapeDtypeStruct((E,), jnp.float32),              # edge_norm
+        jax.ShapeDtypeStruct((N,), jnp.int32),                # labels
+        jax.ShapeDtypeStruct((N,), jnp.float32),              # mask
+    )
+    nshard = NamedSharding(mesh, P(dspec[0], *([None])))
+    eshard = NamedSharding(mesh, P(dspec[0]))
+    in_sh = (pshard, oshard,
+             NamedSharding(mesh, P(dspec[0], None)), eshard, eshard, eshard,
+             NamedSharding(mesh, P(dspec[0])), NamedSharding(mesh, P(dspec[0])))
+    opt_cfg = AdamWConfig()
+
+    def train_step(params, opt_state, feats, src, dst, edge_norm,
+                   labels, mask):
+        def loss_fn(p):
+            return G.loss_fn(p, cfg, feats, src, dst, edge_norm, labels,
+                             mask)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    mshard = {k: NamedSharding(mesh, P()) for k in
+              ("grad_norm", "lr", "loss")}
+    return LoweringSpec(
+        fn=train_step, args=args, in_shardings=in_sh,
+        out_shardings=(pshard, oshard, mshard),
+        donate_argnums=(0, 1),
+    )
+
+
+def gnn_minibatch_spec(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh
+                       ) -> LoweringSpec:
+    cfg = _gnn_cfg_for_shape(arch, shape)
+    Bn = shape.params["batch_nodes"]
+    fanouts = list(shape.params["fanouts"])
+    deepest = Bn * int(np.prod(fanouts))
+    pshape = jax.eval_shape(lambda k: G.init_params(k, cfg),
+                            jax.random.key(0))
+    pshard = _named(mesh, jax.tree.map(
+        lambda sds: P(*([None] * len(sds.shape))), pshape))
+    oshape = init_opt_state_shape(pshape)
+    oshard = _named(mesh, jax.tree.map(
+        lambda sds: P(*([None] * len(sds.shape))), oshape))
+    dspec = batch_spec(mesh, 1)
+    args = (
+        pshape, oshape,
+        jax.ShapeDtypeStruct((deepest, cfg.d_feat), jnp.float32),
+        jax.ShapeDtypeStruct((Bn,), jnp.int32),      # seed labels
+    )
+    in_sh = (pshard, oshard, NamedSharding(mesh, P(dspec[0], None)),
+             NamedSharding(mesh, P(dspec[0])))
+    opt_cfg = AdamWConfig()
+
+    def train_step(params, opt_state, deepest_feats, labels):
+        def loss_fn(p):
+            logits = G.minibatch_forward(p, cfg, deepest_feats, fanouts)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+            return jnp.mean(lse - gold)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    mshard = {k: NamedSharding(mesh, P()) for k in
+              ("grad_norm", "lr", "loss")}
+    return LoweringSpec(
+        fn=train_step, args=args, in_shardings=in_sh,
+        out_shardings=(pshard, oshard, mshard),
+        donate_argnums=(0, 1),
+    )
+
+
+# =============================================================================
+# RecSys family
+# =============================================================================
+
+def _recsys_param_shardings(arch: ArchSpec, mesh: Mesh):
+    cfg = arch.config
+    if arch.name == "deepfm":
+        pshape = jax.eval_shape(lambda k: R.deepfm_init(k, cfg),
+                                jax.random.key(0))
+    else:
+        pshape = jax.eval_shape(lambda k: R.seqrec_init(k, cfg),
+                                jax.random.key(0))
+    specs = spec_tree(pshape, recsys_param_spec, mesh)
+    return pshape, _named(mesh, specs), specs
+
+
+def _recsys_batch_args(arch: ArchSpec, B: int, mesh: Mesh):
+    """(args, shardings) for one forward batch of size B."""
+    cfg = arch.config
+    bspec = batch_spec(mesh, 2, B)
+    b1 = batch_spec(mesh, 1, B)
+    if arch.name == "deepfm":
+        ids = jax.ShapeDtypeStruct((B, cfg.n_fields), jnp.int32)
+        return (ids,), (NamedSharding(mesh, bspec),)
+    if arch.name == "bst":
+        seq = jax.ShapeDtypeStruct((B, cfg.seq_len), jnp.int32)
+        tgt = jax.ShapeDtypeStruct((B,), jnp.int32)
+        return (seq, tgt), (NamedSharding(mesh, bspec),
+                            NamedSharding(mesh, b1))
+    seq = jax.ShapeDtypeStruct((B, cfg.seq_len), jnp.int32)
+    return (seq,), (NamedSharding(mesh, bspec),)
+
+
+def recsys_train_spec(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                      variant: str = "baseline") -> LoweringSpec:
+    cfg = arch.config
+    # recsys p_bf16 was measured and REFUTED (+4-5% on the charged-bytes
+    # metric — gathers dominate, §Perf cell 4); selectable via
+    # "opt-pbf16" only.
+    if variant == "opt-pbf16" and hasattr(cfg, "p_bf16"):
+        cfg = dataclasses.replace(cfg, p_bf16=True)
+    B = shape.params["batch"]
+    pshape, pshard, pspecs = _recsys_param_shardings(arch, mesh)
+    oshape = init_opt_state_shape(pshape)
+    ospecs = OptState(
+        mu=jax.tree.map(lambda sds, sp: zero1_spec(sp, sds.shape, mesh),
+                        pshape, pspecs,
+                        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P))),
+        nu=jax.tree.map(lambda sds, sp: zero1_spec(sp, sds.shape, mesh),
+                        pshape, pspecs,
+                        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P))),
+        count=P(),
+    )
+    oshard = _named(mesh, ospecs)
+    bspec = batch_spec(mesh, 2, B)
+    b1 = batch_spec(mesh, 1, B)
+    opt_cfg = AdamWConfig()
+
+    if arch.name == "deepfm":
+        args = (pshape, oshape,
+                jax.ShapeDtypeStruct((B, cfg.n_fields), jnp.int32),
+                jax.ShapeDtypeStruct((B,), jnp.float32))
+        in_sh = (pshard, oshard, NamedSharding(mesh, bspec),
+                 NamedSharding(mesh, b1))
+
+        def loss(p, batch):
+            ids, labels = batch
+            return R.deepfm_loss(p, cfg, ids, labels)
+    elif arch.name == "bst":
+        args = (pshape, oshape,
+                jax.ShapeDtypeStruct((B, cfg.seq_len), jnp.int32),
+                jax.ShapeDtypeStruct((B,), jnp.int32),
+                jax.ShapeDtypeStruct((B,), jnp.float32))
+        in_sh = (pshard, oshard, NamedSharding(mesh, bspec),
+                 NamedSharding(mesh, b1), NamedSharding(mesh, b1))
+
+        def loss(p, batch):
+            seq, tgt, labels = batch
+            return R.bst_loss(p, cfg, seq, tgt, labels)
+    elif arch.name == "bert4rec":
+        M = max(1, cfg.seq_len // 5)  # 20% masking
+        args = (pshape, oshape,
+                jax.ShapeDtypeStruct((B, cfg.seq_len), jnp.int32),
+                jax.ShapeDtypeStruct((B, M), jnp.int32),
+                jax.ShapeDtypeStruct((B, M), jnp.int32),
+                jax.ShapeDtypeStruct((cfg.n_neg,), jnp.int32))
+        in_sh = (pshard, oshard, NamedSharding(mesh, bspec),
+                 NamedSharding(mesh, bspec), NamedSharding(mesh, bspec),
+                 NamedSharding(mesh, P(None)))
+
+        def loss(p, batch):
+            seq, mpos, mtgt, negs = batch
+            return R.bert4rec_masked_loss(p, cfg, seq, mpos, mtgt, negs)
+    else:  # sasrec
+        args = (pshape, oshape,
+                jax.ShapeDtypeStruct((B, cfg.seq_len), jnp.int32),
+                jax.ShapeDtypeStruct((B, cfg.seq_len), jnp.int32),
+                jax.ShapeDtypeStruct((cfg.n_neg,), jnp.int32))
+        in_sh = (pshard, oshard, NamedSharding(mesh, bspec),
+                 NamedSharding(mesh, bspec), NamedSharding(mesh, P(None)))
+
+        def loss(p, batch):
+            seq, tgt, negs = batch
+            return R.seqrec_sampled_loss(p, cfg, seq, tgt, negs)
+
+    def train_step(params, opt_state, *batch):
+        l, grads = jax.value_and_grad(loss)(params, batch)
+        params, opt_state, metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = l
+        return params, opt_state, metrics
+
+    mshard = {k: NamedSharding(mesh, P()) for k in
+              ("grad_norm", "lr", "loss")}
+    return LoweringSpec(
+        fn=train_step, args=args, in_shardings=in_sh,
+        out_shardings=(pshard, oshard, mshard),
+        donate_argnums=(0, 1),
+    )
+
+
+def recsys_serve_spec(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh
+                      ) -> LoweringSpec:
+    cfg = arch.config
+    B = shape.params["batch"]
+    pshape, pshard, _ = _recsys_param_shardings(arch, mesh)
+    args, arg_sh = _recsys_batch_args(arch, B, mesh)
+    oshard = NamedSharding(mesh, batch_spec(mesh, 1, B))
+
+    if arch.name == "deepfm":
+        def serve_step(params, ids):
+            return R.deepfm_forward(params, cfg, ids)
+    elif arch.name == "bst":
+        def serve_step(params, seq, tgt):
+            return R.bst_forward(params, cfg, seq, tgt)
+    else:
+        oshard = NamedSharding(mesh, batch_spec(mesh, 2, B))
+
+        def serve_step(params, seq):
+            h = R.seqrec_encode(params, cfg, seq)
+            return jnp.sum(h[:, -1, :] * h[:, -1, :], axis=-1,
+                           keepdims=True) * 0 + h[:, -1, :]  # (B, d) states
+
+    return LoweringSpec(
+        fn=serve_step, args=(pshape,) + args,
+        in_shardings=(pshard,) + arg_sh, out_shardings=oshard,
+    )
+
+
+def recsys_retrieval_spec(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh
+                          ) -> LoweringSpec:
+    cfg = arch.config
+    B = shape.params["batch"]
+    C = shape.params["n_candidates"]
+    pshape, pshard, _ = _recsys_param_shardings(arch, mesh)
+    cand = jax.ShapeDtypeStruct((C,), jnp.int32)
+    cshard = NamedSharding(mesh, P("model"))
+    out_sh = NamedSharding(mesh, P(None, "model"))
+
+    if arch.name == "deepfm":
+        # one user context against C candidate items: candidate field ids
+        # vary, user fields broadcast — a (C, n_fields) forward.
+        ids = jax.ShapeDtypeStruct((C, cfg.n_fields), jnp.int32)
+
+        def retrieval_step(params, ids):
+            return R.deepfm_forward(params, cfg, ids)
+
+        return LoweringSpec(
+            fn=retrieval_step, args=(pshape, ids),
+            in_shardings=(pshard, NamedSharding(mesh, P("model", None))),
+            out_shardings=NamedSharding(mesh, P("model")),
+        )
+
+    seq = jax.ShapeDtypeStruct((B, cfg.seq_len), jnp.int32)
+
+    def retrieval_step(params, seq, cand_ids):
+        return R.seqrec_score_candidates(params, cfg, seq, cand_ids)
+
+    return LoweringSpec(
+        fn=retrieval_step, args=(pshape, seq, cand),
+        in_shardings=(pshard, NamedSharding(mesh, P(None, None)), cshard),
+        out_shardings=out_sh,
+    )
+
+
+# =============================================================================
+# repair-ir (the paper's own architecture)
+# =============================================================================
+
+def _ir_index_shapes(cfg) -> dict:
+    """ShapeDtypeStructs of a production-scale FlatIndex."""
+    S, N, L, BK = cfg.num_symbols, cfg.c_len, cfg.num_lists, cfg.num_buckets
+    i32 = jnp.int32
+    return {
+        "sym_left": jax.ShapeDtypeStruct((S,), i32),
+        "sym_right": jax.ShapeDtypeStruct((S,), i32),
+        "sym_sum": jax.ShapeDtypeStruct((S,), i32),
+        "sym_len": jax.ShapeDtypeStruct((S,), i32),
+        "c": jax.ShapeDtypeStruct((N,), i32),
+        "starts": jax.ShapeDtypeStruct((L + 1,), i32),
+        "firsts": jax.ShapeDtypeStruct((L,), i32),
+        "lengths": jax.ShapeDtypeStruct((L,), i32),
+        "lasts": jax.ShapeDtypeStruct((L,), i32),
+        "kbits": jax.ShapeDtypeStruct((L,), i32),
+        "bucket_offsets": jax.ShapeDtypeStruct((L + 1,), i32),
+        "bck_c_pos": jax.ShapeDtypeStruct((BK,), i32),
+        "bck_abs": jax.ShapeDtypeStruct((BK,), i32),
+    }
+
+
+def _ir_index_shardings(mesh: Mesh) -> dict:
+    """Grammar tables replicated ("the dictionary fits in RAM"); the big
+    streams (C, buckets) and per-list tables replicated too for the
+    baseline — queries shard over the data axes.  (Sharding C over 'model'
+    is a §Perf iteration; gathers across a sharded C force collectives.)"""
+    rep = P(None)
+    return {
+        "sym_left": rep, "sym_right": rep, "sym_sum": rep, "sym_len": rep,
+        "c": rep, "starts": rep, "firsts": rep, "lengths": rep,
+        "lasts": rep, "kbits": rep, "bucket_offsets": rep,
+        "bck_c_pos": rep, "bck_abs": rep,
+    }
+
+
+def _ir_next_geq(idx: dict, static, list_id, x, unroll: bool = True):
+    """next_geq over the index-dict form (mirrors core/batched.py).
+    ``unroll=True`` expands the two fixed-trip loops to straight-line HLO
+    so cost_analysis counts every iteration (an HLO while body is counted
+    ONCE regardless of trips — same caveat as the LM scan)."""
+    max_scan, max_depth, Tn = static
+    c, starts = idx["c"], idx["starts"]
+    start = starts[list_id]
+    end = starts[list_id + 1]
+    first = idx["firsts"][list_id]
+    last = idx["lasts"][list_id]
+    b = jax.lax.shift_right_logical(x, idx["kbits"][list_id])
+    boff = idx["bucket_offsets"][list_id]
+    bnum = idx["bucket_offsets"][list_id + 1] - boff
+    b = jnp.minimum(b, jnp.maximum(bnum - 1, 0))
+    j = idx["bck_c_pos"][boff + b]
+    s = idx["bck_abs"][boff + b]
+    j = jnp.where(x <= first, 0, j)
+    s = jnp.where(x <= first, first, s)
+
+    def scan_body(_, js):
+        j, s = js
+        in_range = start + j < end
+        sym = jnp.where(in_range, c[jnp.minimum(start + j, c.shape[0] - 1)], 0)
+        ps = jnp.where(in_range, idx["sym_sum"][sym], 0)
+        take = in_range & (s + ps < x)
+        return (j + jnp.where(take, 1, 0), s + jnp.where(take, ps, 0))
+
+    if unroll:
+        js = (j, s)
+        for i in range(max_scan):
+            js = scan_body(i, js)
+        j, s = js
+    else:
+        j, s = jax.lax.fori_loop(0, max_scan, scan_body, (j, s))
+    done_early = s >= x
+    past_end = start + j >= end
+    sym0 = c[jnp.minimum(start + j, c.shape[0] - 1)]
+
+    def descend_body(_, state):
+        sym, s = state
+        is_rule = sym >= Tn
+        l = jnp.where(is_rule, idx["sym_left"][sym], sym)
+        r = jnp.where(is_rule, idx["sym_right"][sym], sym)
+        ls = idx["sym_sum"][l]
+        go_left = s + ls >= x
+        return (jnp.where(is_rule, jnp.where(go_left, l, r), sym),
+                jnp.where(is_rule, jnp.where(go_left, s, s + ls), s))
+
+    if unroll:
+        st = (sym0, s)
+        for i in range(max_depth):
+            st = descend_body(i, st)
+        sym_f, s_f = st
+    else:
+        sym_f, s_f = jax.lax.fori_loop(0, max_depth, descend_body,
+                                       (sym0, s))
+    out = jnp.where(done_early, s, s_f + idx["sym_sum"][sym_f])
+    INT_INF = jnp.int32(2**31 - 1)
+    out = jnp.where(past_end & ~done_early, INT_INF, out)
+    return jnp.where(x > last, INT_INF, out).astype(jnp.int32)
+
+
+def repair_ir_spec(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh,
+                   variant: str = "baseline") -> LoweringSpec:
+    cfg = arch.config
+    if variant == "opt":
+        # §Perf: denser (b)-sampling (B=4 -> max_scan 8) + the §3.4
+        # rule-optimized grammar (measured heights <= 16) shrink the two
+        # fixed trip counts that dominate per-query gather traffic —
+        # Corollary 1's space-for-time trade, applied to the device
+        # engine.  (The 2× bucket-table space this implies is paid in HBM
+        # capacity, not in the per-query traffic the roofline measures;
+        # HLO gather cost charges whole-operand bytes, so growing the
+        # table inside this measurement would spuriously dominate.)
+        cfg = dataclasses.replace(cfg, max_scan=8, max_depth=16)
+    idx_shapes = _ir_index_shapes(cfg)
+    idx_shard = _named(mesh, _ir_index_shardings(mesh))
+    static = (cfg.max_scan, cfg.max_depth,
+              cfg.num_symbols // 2)   # half the ids are dense terminals
+    bspec = batch_spec(mesh, 1)
+
+    if shape.kind == "ir_members":
+        B = shape.params["batch"]
+        args = (idx_shapes,
+                jax.ShapeDtypeStruct((B,), jnp.int32),
+                jax.ShapeDtypeStruct((B,), jnp.int32))
+        in_sh = (idx_shard, NamedSharding(mesh, bspec),
+                 NamedSharding(mesh, bspec))
+
+        def member_step(idx, list_ids, xs):
+            f = partial(_ir_next_geq, idx, static)
+            return jax.vmap(f)(list_ids, xs) == xs
+
+        return LoweringSpec(fn=member_step, args=args, in_shardings=in_sh,
+                            out_shardings=NamedSharding(mesh, bspec))
+
+    if shape.kind == "ir_pairs":
+        B = shape.params["batch"]
+        M = cfg.max_short_len
+        args = (idx_shapes,
+                jax.ShapeDtypeStruct((B, M), jnp.int32),   # expanded shorts
+                jax.ShapeDtypeStruct((B,), jnp.int32))     # long ids
+        in_sh = (idx_shard, NamedSharding(mesh, batch_spec(mesh, 2)),
+                 NamedSharding(mesh, bspec))
+
+        def pairs_step(idx, shorts, long_ids):
+            f = partial(_ir_next_geq, idx, static)
+            INT_INF = jnp.int32(2**31 - 1)
+
+            def one(long_id, xs):
+                vals = jax.vmap(lambda x: f(long_id, x))(xs)
+                return jnp.where((vals == xs) & (xs != INT_INF), xs, INT_INF)
+
+            return jax.vmap(one)(long_ids, shorts)
+
+        return LoweringSpec(
+            fn=pairs_step, args=args, in_shardings=in_sh,
+            out_shardings=NamedSharding(mesh, batch_spec(mesh, 2)))
+
+    # ir_decode: bulk gap -> docid decode (prefix sums), rows of gaps
+    rows, cols = shape.params["rows"], shape.params["cols"]
+    args = (jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+            jax.ShapeDtypeStruct((rows, 1), jnp.int32))
+    rshard = NamedSharding(mesh, batch_spec(mesh, 2))
+
+    def decode_step(gaps, firsts):
+        return jnp.cumsum(gaps, axis=1) + firsts
+
+    return LoweringSpec(fn=decode_step, args=args,
+                        in_shardings=(rshard, rshard),
+                        out_shardings=rshard)
+
+
+# =============================================================================
+# dispatch
+# =============================================================================
+
+def build_lowering_spec(arch_name: str, shape_name: str, mesh: Mesh,
+                        unroll: bool = False,
+                        n_layers_override: int | None = None,
+                        variant: str = "baseline") -> LoweringSpec:
+    arch = get_arch(arch_name)
+    shape = arch.shape(shape_name)
+    if arch.family == "lm":
+        if shape.kind == "train":
+            return lm_train_spec(arch, shape, mesh, unroll,
+                                 n_layers_override, variant)
+        if shape.kind == "prefill":
+            return lm_prefill_spec(arch, shape, mesh, unroll,
+                                   n_layers_override, variant)
+        return lm_decode_spec(arch, shape, mesh, unroll, n_layers_override,
+                              variant)
+    if arch.family == "gnn":
+        if shape.kind == "minibatch":
+            return gnn_minibatch_spec(arch, shape, mesh)
+        return gnn_full_graph_spec(arch, shape, mesh)
+    if arch.family == "recsys":
+        if shape.kind == "train":
+            return recsys_train_spec(arch, shape, mesh, variant)
+        if shape.kind == "retrieval":
+            return recsys_retrieval_spec(arch, shape, mesh)
+        return recsys_serve_spec(arch, shape, mesh)
+    if arch.family == "repair_ir":
+        return repair_ir_spec(arch, shape, mesh, variant)
+    raise ValueError(f"unknown family {arch.family}")
+
+
+def all_cells(include_repair_ir: bool = True) -> list[tuple[str, str]]:
+    """The 40 assigned cells (+ the paper's own arch if requested)."""
+    from ..configs import list_archs
+    cells = []
+    for a in list_archs():
+        arch = get_arch(a)
+        if arch.family == "repair_ir" and not include_repair_ir:
+            continue
+        for s in arch.shapes:
+            cells.append((a, s.name))
+    return cells

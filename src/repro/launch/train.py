@@ -1,0 +1,82 @@
+"""Training launcher: ``--arch <id>`` selects an assigned architecture.
+
+Two modes:
+  * ``--smoke``  — run the arch's REDUCED config end-to-end on the local
+                   device(s): real data pipeline, optimizer, checkpoints.
+  * default      — production posture: build the full config's lowering
+                   spec on the production mesh and compile it (the actual
+                   launch on a pod slice runs this same spec under the
+                   cluster's jax.distributed initialization; on CPU this
+                   is exactly the dry-run path).
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke --steps 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import numpy as np
+
+
+def smoke_train(arch_name: str, steps: int, ckpt_dir: str | None) -> None:
+    import jax
+    from ..configs import get_arch
+    from ..data import DataConfig, ShardedTokenPipeline, SyntheticLMDataset
+    from ..models import transformer as T
+    from ..train.loop import Trainer, TrainConfig
+    from ..train.optimizer import AdamWConfig
+
+    arch = get_arch(arch_name)
+    if arch.family != "lm":
+        raise SystemExit(f"--smoke training supports LM archs; "
+                         f"{arch_name} is {arch.family}")
+    cfg = arch.smoke_config
+    params = T.init_params(jax.random.key(0), cfg)
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"[smoke] {arch_name}: reduced config, {n/1e6:.2f}M params")
+    dcfg = DataConfig(seq_len=32, global_batch=8, vocab=cfg.vocab)
+    pipe = ShardedTokenPipeline(SyntheticLMDataset(dcfg))
+
+    def loss_fn(p, batch):
+        return T.lm_loss(p, cfg, batch["tokens"], batch["targets"])
+
+    tr = Trainer(loss_fn, params, pipe,
+                 opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=5,
+                                     total_steps=steps),
+                 train_cfg=TrainConfig(
+                     total_steps=steps, ckpt_every=max(steps // 2, 1),
+                     ckpt_dir=ckpt_dir or tempfile.mkdtemp(prefix="smoke_"),
+                     log_every=max(steps // 10, 1)))
+    hist = tr.run()
+    print(f"[smoke] final loss {hist[-1]['loss']:.4f} "
+          f"(start {hist[0]['loss']:.4f})")
+
+
+def production_compile(arch_name: str, shape: str, multi_pod: bool) -> None:
+    # late import so --smoke never touches the 512-device override
+    from .dryrun import run_cell
+    run_cell(arch_name, shape, multi_pod)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke_train(args.arch, args.steps, args.ckpt_dir)
+    else:
+        import os
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count=512")
+        production_compile(args.arch, args.shape, args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

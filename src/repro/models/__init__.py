@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned architectures (5 LM transformers incl. MoE and
+MLA, 1 GNN, 4 recsys) as pure-function JAX models with pytree params."""

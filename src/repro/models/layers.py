@@ -1,0 +1,351 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (with optional
+per-head qk-norm and KV-head repetition for tensor parallelism), MLA
+(DeepSeek-V2-style latent attention, used by MiniCPM3), SwiGLU MLP, and a
+chunked ("flash-style") attention that never materializes the full S×S
+score matrix — mandatory for the 32k prefill shapes to fit HBM.
+
+All functions are pure; parameters are plain dicts of jnp arrays.  Compute
+dtype is bf16, accumulation fp32 (preferred_element_type) — v5e MXU native.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Dtype = jnp.bfloat16
+NEG_INF = -1e30
+
+
+# -- basics ------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float = 1e6) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) int32 -> cos/sin (..., dim//2) fp32."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, D) with cos/sin (..., S, D//2) — rotate pairs."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, bf16_combine: bool = False) -> jax.Array:
+    """Matmul with f32 accumulation.  With ``bf16_combine`` the OUTPUT is
+    produced in bf16 directly (MXU still accumulates f32 internally) — the
+    partial sums that cross tensor-parallel shards then all-reduce in bf16
+    instead of f32, halving the dominant per-layer collective (§Perf H1).
+    Only the row-parallel projections (wo, w_down) set this: their outputs
+    are what TP reduces across shards."""
+    if bf16_combine:
+        return jnp.dot(x, w)  # bf16 in -> bf16 out, f32 MXU accumulate
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, bf16_combine: bool = False) -> jax.Array:
+    g = dense(x, w_gate, bf16_combine)
+    u = dense(x, w_up, bf16_combine)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return dense(h, w_down, bf16_combine)
+
+
+# -- chunked causal attention (flash-style, pure jnp) -------------------------
+
+def _chunk_attn(q, k, v, q_offset, kv_offset, window: int | None,
+                p_bf16: bool = False):
+    """One (q_chunk, kv_chunk) tile: returns (out_unnorm, row_max, row_sumexp).
+    q (B, Tq, H, D), k/v (B, Tk, H, D).  ``p_bf16`` stores the (B,H,Tq,Tk)
+    score/probability tiles in bf16 — they are the dominant HBM traffic of
+    the unfused attention (§Perf memory-term lever); the row max/sum stats
+    stay f32 so the online-softmax recurrence is unchanged."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    logits *= 1.0 / math.sqrt(d)
+    qpos = q_offset + jnp.arange(q.shape[1])[:, None]
+    kpos = kv_offset + jnp.arange(k.shape[1])[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, :, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)                      # (B,H,Tq)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    if p_bf16:
+        p = p.astype(jnp.bfloat16)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out, m, l
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    kv_chunk: int = 1024, window: int | None = None,
+                    p_bf16: bool = False,
+                    attn_shard: tuple | None = None) -> jax.Array:
+    """Causal attention without the full S×S intermediate.  q (B,S,H,D);
+    k/v (B,S,KH,D) with KH == H (callers repeat KV heads first).  Scans over
+    KV chunks keeping running (max, sumexp, out) — the online-softmax
+    recurrence of FlashAttention, expressed in jnp for XLA.
+
+    ``attn_shard=(dp, tp)`` pins the CHUNK-STACKED kv operands (the scan
+    xs) batch/head-sharded (§Perf H6): the reshape+transpose that builds
+    them loses the sharding annotation and the partitioner otherwise
+    all-gathers every kv chunk across the head shards (f32-converted on
+    the CPU backend — 6 GiB/layer at qwen's train shape).  Pinning the
+    CARRY instead was tried and refuted (H4): it fights the partitioner's
+    accumulator placement and doubles both roofline terms."""
+    B, S, H, D = q.shape
+    S_kv = k.shape[1]
+    kv_chunk = min(kv_chunk, S_kv)
+    S_pad = -(-S_kv // kv_chunk) * kv_chunk
+    if S_pad != S_kv:
+        # padded keys sit at positions > every query -> causally masked out
+        k = jnp.pad(k, ((0, 0), (0, S_pad - S_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, S_pad - S_kv), (0, 0), (0, 0)))
+    n_chunks = S_pad // kv_chunk
+    kc = k.reshape(B, n_chunks, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    if attn_shard is not None:
+        dp, tp = attn_shard
+        spec = jax.sharding.PartitionSpec(None, dp, None, tp, None)
+        kc = jax.lax.with_sharding_constraint(kc, spec)
+        vc = jax.lax.with_sharding_constraint(vc, spec)
+
+    def body(carry, ckv):
+        out, m, l, idx = carry
+        kb, vb = ckv
+        o_i, m_i, l_i = _chunk_attn(q, kb, vb, 0, idx * kv_chunk, window,
+                                    p_bf16)
+        m_new = jnp.maximum(m, m_i)
+        a = jnp.exp(m - m_new)
+        b = jnp.exp(m_i - m_new)
+        out = out * a[..., None].transpose(0, 2, 1, 3) + \
+            o_i * b[..., None].transpose(0, 2, 1, 3)
+        l = l * a + l_i * b
+        return (out, m_new, l, idx + 1), None
+
+    out0 = jnp.zeros((B, S, H, D), jnp.float32)
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    (out, m, l, _), _ = jax.lax.scan(body, (out0, m0, l0, 0), (kc, vc))
+    denom = jnp.maximum(l, 1e-30)[..., None].transpose(0, 2, 1, 3)
+    return (out / denom).astype(q.dtype)
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, KH, D) -> (B, S, KH*n_rep, D) by head repetition (GQA share)."""
+    if n_rep == 1:
+        return k
+    B, S, KH, D = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KH, n_rep, D)
+                            ).reshape(B, S, KH * n_rep, D)
+
+
+# -- GQA attention block -------------------------------------------------------
+
+def init_gqa(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             qk_norm: bool, dtype=Dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": jax.random.normal(k1, (d_model, n_heads * head_dim), dtype) * s,
+        "wk": jax.random.normal(k2, (d_model, n_kv * head_dim), dtype) * s,
+        "wv": jax.random.normal(k3, (d_model, n_kv * head_dim), dtype) * s,
+        "wo": jax.random.normal(k4, (n_heads * head_dim, d_model), dtype) * s,
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def gqa_attention(p: dict, x: jax.Array, positions: jax.Array, *,
+                  n_heads: int, n_kv: int, head_dim: int,
+                  rope_theta: float = 1e6, window: int | None = None,
+                  kv_chunk: int = 1024, p_bf16: bool = False,
+                  bf16_combine: bool = False,
+                  attn_shard: tuple | None = None) -> jax.Array:
+    """x (B, S, D) -> (B, S, D); full training/prefill attention."""
+    B, S, _ = x.shape
+    q = dense(x, p["wq"], bf16_combine).reshape(B, S, n_heads, head_dim)
+    k = dense(x, p["wk"], bf16_combine).reshape(B, S, n_kv, head_dim)
+    v = dense(x, p["wv"], bf16_combine).reshape(B, S, n_kv, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    cos, sin = rope_angles(positions, head_dim, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    k = repeat_kv(k, n_heads // n_kv)
+    v = repeat_kv(v, n_heads // n_kv)
+    o = flash_attention(q, k, v, kv_chunk=min(kv_chunk, S), window=window,
+                        p_bf16=p_bf16, attn_shard=attn_shard)
+    return dense(o.reshape(B, S, n_heads * head_dim), p["wo"], bf16_combine)
+
+
+def gqa_decode(p: dict, x: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+               position: jax.Array, *, n_heads: int, n_kv: int,
+               head_dim: int, rope_theta: float = 1e6) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode.  x (B, 1, D); cache_k/v (B, S_cache, KH, D);
+    position (B,) int32 — number of valid cache entries (the new token's
+    index).  Returns (out (B,1,D), new_k, new_v) with the token written at
+    ``position`` (callers handle ring-buffer wrap for SWA)."""
+    B, _, _ = x.shape
+    S_cache = cache_k.shape[1]
+    q = dense(x, p["wq"]).reshape(B, 1, n_heads, head_dim)
+    k = dense(x, p["wk"]).reshape(B, 1, n_kv, head_dim)
+    v = dense(x, p["wv"]).reshape(B, 1, n_kv, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    cos, sin = rope_angles(position[:, None], head_dim, rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # write into cache at position (mod S_cache: ring for SWA)
+    slot = (position % S_cache).astype(jnp.int32)
+    onehot = jax.nn.one_hot(slot, S_cache, dtype=cache_k.dtype)  # (B, S)
+    cache_k = cache_k * (1 - onehot)[:, :, None, None] + \
+        onehot[:, :, None, None] * k
+    cache_v = cache_v * (1 - onehot)[:, :, None, None] + \
+        onehot[:, :, None, None] * v
+    kk = repeat_kv(cache_k, n_heads // n_kv)
+    vv = repeat_kv(cache_v, n_heads // n_kv)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32)
+    logits *= 1.0 / math.sqrt(head_dim)
+    kpos = jnp.arange(S_cache)[None, :]
+    valid = kpos <= jnp.minimum(position, S_cache - 1)[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w.astype(vv.dtype), vv,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = dense(o.reshape(B, 1, n_heads * head_dim), p["wo"])
+    return out, cache_k, cache_v
+
+
+# -- MLA (multi-head latent attention, DeepSeek-V2 / MiniCPM3) ----------------
+
+def init_mla(key, d_model: int, n_heads: int, *, q_lora_rank: int,
+             kv_lora_rank: int, nope_dim: int, rope_dim: int, v_dim: int,
+             dtype=Dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(d_model)
+    qk_dim = nope_dim + rope_dim
+    return {
+        "wq_a": jax.random.normal(ks[0], (d_model, q_lora_rank), dtype) * s,
+        "q_a_norm": jnp.ones((q_lora_rank,), dtype),
+        "wq_b": jax.random.normal(ks[1], (q_lora_rank, n_heads * qk_dim), dtype) * s,
+        "wkv_a": jax.random.normal(ks[2], (d_model, kv_lora_rank + rope_dim), dtype) * s,
+        "kv_a_norm": jnp.ones((kv_lora_rank,), dtype),
+        "wkv_b": jax.random.normal(
+            ks[3], (kv_lora_rank, n_heads * (nope_dim + v_dim)), dtype) * s,
+        "wo": jax.random.normal(ks[4], (n_heads * v_dim, d_model), dtype) * s,
+    }
+
+
+def mla_attention(p: dict, x: jax.Array, positions: jax.Array, *,
+                  n_heads: int, nope_dim: int, rope_dim: int, v_dim: int,
+                  kv_lora_rank: int, rope_theta: float = 1e4,
+                  kv_chunk: int = 1024, window: int | None = None,
+                  p_bf16: bool = False, bf16_combine: bool = False,
+                  attn_shard: tuple | None = None) -> jax.Array:
+    """Latent attention, materialized form: latent c_kv (B,S,r) + shared
+    k_rope; per-head k_nope/v decompressed from the latent.  The KV cache
+    for decode stores only (c_kv, k_rope) — the paper-accurate memory win."""
+    B, S, _ = x.shape
+    qk_dim = nope_dim + rope_dim
+    q = dense(rms_norm(dense(x, p["wq_a"]), p["q_a_norm"]), p["wq_b"])
+    q = q.reshape(B, S, n_heads, qk_dim)
+    q_nope, q_rope = jnp.split(q, [nope_dim], axis=-1)
+    kv_a = dense(x, p["wkv_a"])
+    c_kv, k_rope = jnp.split(kv_a, [kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_a_norm"])
+    kv = dense(c_kv, p["wkv_b"]).reshape(B, S, n_heads, nope_dim + v_dim)
+    k_nope, v = jnp.split(kv, [nope_dim], axis=-1)
+    cos, sin = rope_angles(positions, rope_dim, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope.reshape(B, S, 1, rope_dim), cos, sin)
+    k_rope = jnp.broadcast_to(k_rope, (B, S, n_heads, rope_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope], axis=-1)
+    # pad v to qk_dim so flash_attention can share one head_dim, then slice
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - v_dim)))
+    o = flash_attention(q_full, k_full, v_pad, kv_chunk=min(kv_chunk, S),
+                        window=window, p_bf16=p_bf16,
+                        attn_shard=attn_shard)[..., :v_dim]
+    return dense(o.reshape(B, S, n_heads * v_dim), p["wo"], bf16_combine)
+
+
+def mla_decode(p: dict, x: jax.Array, cache_ckv: jax.Array,
+               cache_krope: jax.Array, position: jax.Array, *,
+               n_heads: int, nope_dim: int, rope_dim: int, v_dim: int,
+               kv_lora_rank: int, rope_theta: float = 1e4
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode with latent cache: cache_ckv (B, S, r), cache_krope (B, S, rd).
+    Decompresses k_nope/v for scoring (dense path; the absorbed-matmul trick
+    is a further optimization noted in EXPERIMENTS.md)."""
+    B = x.shape[0]
+    S_cache = cache_ckv.shape[1]
+    qk_dim = nope_dim + rope_dim
+    q = dense(rms_norm(dense(x, p["wq_a"]), p["q_a_norm"]), p["wq_b"])
+    q = q.reshape(B, 1, n_heads, qk_dim)
+    q_nope, q_rope = jnp.split(q, [nope_dim], axis=-1)
+    kv_a = dense(x, p["wkv_a"])
+    c_kv, k_rope = jnp.split(kv_a, [kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_a_norm"])
+    cos, sin = rope_angles(position[:, None], rope_dim, rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope.reshape(B, 1, 1, rope_dim), cos, sin)
+
+    slot = (position % S_cache).astype(jnp.int32)
+    onehot = jax.nn.one_hot(slot, S_cache, dtype=cache_ckv.dtype)
+    cache_ckv = cache_ckv * (1 - onehot)[:, :, None] + \
+        onehot[:, :, None] * c_kv
+    cache_krope = cache_krope * (1 - onehot)[:, :, None] + \
+        onehot[:, :, None] * k_rope.reshape(B, 1, rope_dim)
+
+    kv = dense(cache_ckv, p["wkv_b"]).reshape(B, S_cache, n_heads,
+                                              nope_dim + v_dim)
+    k_nope, v = jnp.split(kv, [nope_dim], axis=-1)
+    k_rope_all = jnp.broadcast_to(cache_krope[:, :, None, :],
+                                  (B, S_cache, n_heads, rope_dim))
+    k_full = jnp.concatenate([k_nope, k_rope_all], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q_full, k_full,
+                        preferred_element_type=jnp.float32)
+    logits *= 1.0 / math.sqrt(qk_dim)
+    kpos = jnp.arange(S_cache)[None, :]
+    valid = kpos <= jnp.minimum(position, S_cache - 1)[:, None]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = dense(o.reshape(B, 1, n_heads * v_dim), p["wo"])
+    return out, cache_ckv, cache_krope
+
+
+# -- MLP ----------------------------------------------------------------------
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=Dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * (1.0 / math.sqrt(d_ff)),
+    }

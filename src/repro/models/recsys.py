@@ -1,0 +1,285 @@
+"""RecSys architectures: DeepFM, SASRec, BERT4Rec, BST.
+
+JAX has no ``nn.EmbeddingBag`` — lookups are ``jnp.take`` +
+``jax.ops.segment_sum`` (kernel_taxonomy §RecSys), implemented here as a
+first-class op (``embedding_bag``).  Embedding tables are the dominant
+state: they shard row-wise (vocab dim) over the ``model`` mesh axis; batch
+shards over ``data``.
+
+Four serving regimes map to the assigned shapes:
+* train_batch (65,536)  — full train step,
+* serve_p99 (512)       — small-batch scoring,
+* serve_bulk (262,144)  — offline scoring,
+* retrieval_cand        — one context against 1M candidates: a single
+                          (d,) @ (1M, d)^T matmul (batched dot, NOT a loop).
+
+Sequence models train with sampled-softmax (vocabs reach 10^6; full softmax
+over items at batch 65k would be absurd — this matches production practice
+and the papers' own negative-sampling losses).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# -- embedding bag (the recsys hot path) --------------------------------------
+
+def embedding_bag(table: jax.Array, indices: jax.Array, offsets: jax.Array,
+                  mode: str = "sum") -> jax.Array:
+    """torch.nn.EmbeddingBag equivalent: ``indices`` (N,) flat ids grouped
+    into bags by ``offsets`` (B+1,); returns (B, d) reduced per bag."""
+    emb = jnp.take(table, indices, axis=0)              # (N, d)
+    bag_ids = jnp.searchsorted(offsets[1:], jnp.arange(indices.shape[0]),
+                               side="right")
+    out = jax.ops.segment_sum(emb, bag_ids, num_segments=offsets.shape[0] - 1)
+    if mode == "mean":
+        counts = offsets[1:] - offsets[:-1]
+        out = out / jnp.maximum(counts, 1)[:, None]
+    return out
+
+
+def embedding_bag_fixed(table: jax.Array, indices: jax.Array,
+                        mode: str = "sum") -> jax.Array:
+    """Fixed-bag-size variant: indices (B, n) -> (B, d).  The common case
+    for fielded models (one id per field) and the one the dry run lowers."""
+    emb = jnp.take(table, indices.reshape(-1), axis=0)
+    emb = emb.reshape(*indices.shape, table.shape[-1])
+    return emb.sum(axis=-2) if mode == "sum" else emb.mean(axis=-2)
+
+
+# ==============================================================================
+# DeepFM  [arXiv:1703.04247]
+# ==============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DeepFMConfig:
+    name: str = "deepfm"
+    n_fields: int = 39
+    embed_dim: int = 10
+    mlp_dims: tuple = (400, 400, 400)
+    field_vocabs: tuple = ()        # per-field vocab sizes
+
+    def total_rows(self) -> int:
+        return sum(self.field_vocabs)
+
+
+def deepfm_init(key, cfg: DeepFMConfig) -> dict:
+    keys = jax.random.split(key, 4)
+    V = cfg.total_rows()
+    d = cfg.embed_dim
+    dims = [cfg.n_fields * d] + list(cfg.mlp_dims) + [1]
+    mkeys = jax.random.split(keys[2], len(dims) - 1)
+    return {
+        # one concatenated table; fields offset into it (keeps sharding to a
+        # single row-sharded tensor)
+        "table": jax.random.normal(keys[0], (V, d), jnp.float32) * 0.01,
+        "table_1d": jax.random.normal(keys[1], (V, 1), jnp.float32) * 0.01,
+        "mlp_w": [jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32)
+                  * (1.0 / math.sqrt(dims[i])) for i, k in enumerate(mkeys)],
+        "mlp_b": [jnp.zeros((dims[i + 1],), jnp.float32)
+                  for i in range(len(dims) - 1)],
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def deepfm_forward(p: dict, cfg: DeepFMConfig, ids: jax.Array) -> jax.Array:
+    """ids (B, n_fields) — already offset into the concatenated table.
+    Returns logits (B,)."""
+    B = ids.shape[0]
+    d = cfg.embed_dim
+    emb = jnp.take(p["table"], ids.reshape(-1), axis=0).reshape(
+        B, cfg.n_fields, d)
+    lin = jnp.take(p["table_1d"], ids.reshape(-1), axis=0).reshape(
+        B, cfg.n_fields).sum(-1)
+    # FM 2nd order: 0.5 * ((sum v)^2 - sum v^2)
+    sv = emb.sum(axis=1)
+    fm = 0.5 * (jnp.square(sv) - jnp.square(emb).sum(axis=1)).sum(axis=-1)
+    # deep part
+    h = emb.reshape(B, cfg.n_fields * d)
+    for i, (w, b) in enumerate(zip(p["mlp_w"], p["mlp_b"])):
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32) + b
+        if i < len(p["mlp_w"]) - 1:
+            h = jax.nn.relu(h)
+    return p["bias"] + lin + fm + h[:, 0]
+
+
+def deepfm_loss(p, cfg, ids, labels):
+    logits = deepfm_forward(p, cfg, ids)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# ==============================================================================
+# Sequential models: SASRec [1808.09781], BERT4Rec [1904.06690], BST [1905.06874]
+# ==============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SeqRecConfig:
+    name: str
+    n_items: int
+    embed_dim: int
+    n_blocks: int
+    n_heads: int
+    seq_len: int
+    causal: bool                    # sasrec/bst causal, bert4rec bidir
+    mlp_dims: tuple = ()            # bst's final MLP
+    n_neg: int = 128                # sampled-softmax negatives
+    dropout: float = 0.0
+    p_bf16: bool = False            # bf16 attention score/prob tiles —
+    #                                 the (B,H,S,S) intermediates dominate
+    #                                 HBM traffic at train_batch=65536
+    #                                 (§Perf cell 4); stats math stays f32
+
+
+def seqrec_init(key, cfg: SeqRecConfig) -> dict:
+    keys = jax.random.split(key, 6)
+    d = cfg.embed_dim
+    blocks = []
+    bkeys = jax.random.split(keys[2], cfg.n_blocks)
+    for bk in bkeys:
+        k1, k2, k3, k4 = jax.random.split(bk, 4)
+        s = 1.0 / math.sqrt(d)
+        blocks.append({
+            "wqkv": jax.random.normal(k1, (d, 3 * d), jnp.float32) * s,
+            "wo": jax.random.normal(k2, (d, d), jnp.float32) * s,
+            "w1": jax.random.normal(k3, (d, 4 * d), jnp.float32) * s,
+            "w2": jax.random.normal(k4, (4 * d, d), jnp.float32) * 0.5 * s,
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+        })
+    p = {
+        "item_emb": jax.random.normal(keys[0], (cfg.n_items, d),
+                                      jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(keys[1], (cfg.seq_len, d),
+                                     jnp.float32) * 0.02,
+        "blocks": blocks,
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+    if cfg.mlp_dims:
+        dims = [2 * d] + list(cfg.mlp_dims) + [1]
+        mkeys = jax.random.split(keys[3], len(dims) - 1)
+        p["mlp_w"] = [jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32)
+                      * (1.0 / math.sqrt(dims[i]))
+                      for i, k in enumerate(mkeys)]
+        p["mlp_b"] = [jnp.zeros((dims[i + 1],), jnp.float32)
+                      for i in range(len(dims) - 1)]
+    return p
+
+
+def _ln(x, g):
+    mu = x.mean(-1, keepdims=True)
+    var = jnp.square(x - mu).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def _block(b: dict, x: jax.Array, n_heads: int, causal: bool,
+           p_bf16: bool = False) -> jax.Array:
+    B, S, d = x.shape
+    hd = d // n_heads
+    h = _ln(x, b["ln1"])
+    qkv = jnp.dot(h, b["wqkv"], preferred_element_type=jnp.float32)
+    q, k, v = jnp.split(qkv.reshape(B, S, 3, n_heads, hd), 3, axis=2)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    if p_bf16:
+        q, k = q.astype(jnp.bfloat16), k.astype(jnp.bfloat16)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    if p_bf16:
+        w = w.astype(jnp.bfloat16)
+        v = v.astype(jnp.bfloat16)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v,
+                   preferred_element_type=jnp.float32).reshape(B, S, d)
+    x = x + jnp.dot(o, b["wo"], preferred_element_type=jnp.float32)
+    h = _ln(x, b["ln2"])
+    h = jax.nn.gelu(jnp.dot(h, b["w1"], preferred_element_type=jnp.float32))
+    return x + jnp.dot(h, b["w2"], preferred_element_type=jnp.float32)
+
+
+def seqrec_encode(p: dict, cfg: SeqRecConfig, item_ids: jax.Array) -> jax.Array:
+    """item_ids (B, S) -> contextual item states (B, S, d)."""
+    x = jnp.take(p["item_emb"], item_ids, axis=0) + p["pos_emb"][None]
+    for b in p["blocks"]:
+        x = _block(b, x, cfg.n_heads, cfg.causal, cfg.p_bf16)
+    return _ln(x, p["ln_f"])
+
+
+def seqrec_sampled_loss(p: dict, cfg: SeqRecConfig, item_ids: jax.Array,
+                        targets: jax.Array, neg_ids: jax.Array) -> jax.Array:
+    """Sampled softmax: score positives vs ``n_neg`` shared negatives.
+    item_ids (B, S); targets (B, S); neg_ids (n_neg,)."""
+    h = seqrec_encode(p, cfg, item_ids)                    # (B, S, d)
+    pos_e = jnp.take(p["item_emb"], targets, axis=0)       # (B, S, d)
+    neg_e = jnp.take(p["item_emb"], neg_ids, axis=0)       # (n, d)
+    pos_l = jnp.sum(h * pos_e, axis=-1, keepdims=True)     # (B, S, 1)
+    neg_l = jnp.einsum("bsd,nd->bsn", h, neg_e,
+                       preferred_element_type=jnp.float32)
+    logits = jnp.concatenate([pos_l, neg_l], axis=-1)
+    return jnp.mean(jax.nn.logsumexp(logits, -1) - logits[..., 0])
+
+
+def seqrec_score_candidates(p: dict, cfg: SeqRecConfig, item_ids: jax.Array,
+                            cand_ids: jax.Array) -> jax.Array:
+    """retrieval_cand: item_ids (B, S) context; cand_ids (C,) -> (B, C)
+    scores, one batched matmul against candidate embeddings."""
+    h = seqrec_encode(p, cfg, item_ids)[:, -1, :]          # (B, d)
+    cand = jnp.take(p["item_emb"], cand_ids, axis=0)       # (C, d)
+    return jnp.dot(h, cand.T, preferred_element_type=jnp.float32)
+
+
+# -- BST: target-aware CTR scoring ---------------------------------------------
+
+def bst_forward(p: dict, cfg: SeqRecConfig, item_ids: jax.Array,
+                target_ids: jax.Array) -> jax.Array:
+    """BST scores (history, target) pairs: the target item is appended to
+    the behavior sequence before the transformer (the paper's layout), then
+    [seq-pool, target-emb] feeds the MLP head.  Returns logits (B,)."""
+    B, S = item_ids.shape
+    tgt_e = jnp.take(p["item_emb"], target_ids, axis=0)    # (B, d)
+    x = jnp.take(p["item_emb"], item_ids, axis=0)
+    x = jnp.concatenate([x, tgt_e[:, None, :]], axis=1)    # (B, S+1, d)
+    x = x + jnp.pad(p["pos_emb"], ((0, 1), (0, 0)))[None, :S + 1]
+    for b in p["blocks"]:
+        x = _block(b, x, cfg.n_heads, causal=False, p_bf16=cfg.p_bf16)
+    x = _ln(x, p["ln_f"])
+    pooled = x.mean(axis=1)
+    h = jnp.concatenate([pooled, tgt_e], axis=-1)
+    for i, (w, bb) in enumerate(zip(p["mlp_w"], p["mlp_b"])):
+        h = jnp.dot(h, w, preferred_element_type=jnp.float32) + bb
+        if i < len(p["mlp_w"]) - 1:
+            h = jax.nn.leaky_relu(h)
+    return h[:, 0]
+
+
+def bst_loss(p, cfg, item_ids, target_ids, labels):
+    logits = bst_forward(p, cfg, item_ids, target_ids)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+# -- BERT4Rec masked training ---------------------------------------------------
+
+def bert4rec_masked_loss(p: dict, cfg: SeqRecConfig, item_ids: jax.Array,
+                         mask_pos: jax.Array, mask_targets: jax.Array,
+                         neg_ids: jax.Array) -> jax.Array:
+    """item_ids (B, S) with [MASK]=0 holes; mask_pos (B, M) positions;
+    mask_targets (B, M) true items; sampled softmax at masked positions."""
+    h = seqrec_encode(p, cfg, item_ids)                    # (B, S, d)
+    hm = jnp.take_along_axis(h, mask_pos[..., None], axis=1)  # (B, M, d)
+    pos_e = jnp.take(p["item_emb"], mask_targets, axis=0)
+    neg_e = jnp.take(p["item_emb"], neg_ids, axis=0)
+    pos_l = jnp.sum(hm * pos_e, axis=-1, keepdims=True)
+    neg_l = jnp.einsum("bmd,nd->bmn", hm, neg_e,
+                       preferred_element_type=jnp.float32)
+    logits = jnp.concatenate([pos_l, neg_l], axis=-1)
+    return jnp.mean(jax.nn.logsumexp(logits, -1) - logits[..., 0])

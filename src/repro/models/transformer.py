@@ -1,0 +1,386 @@
+"""Decoder-only LM covering the 5 assigned transformer architectures:
+
+* qwen3-32b      — dense, GQA(64q/8kv, head 128), qk-norm
+* yi-6b          — dense, GQA(32q/4kv, head 128), llama-arch
+* minicpm3-4b    — dense, MLA (latent attention)
+* granite-moe    — MoE 40e top-8, GQA(24q/8kv)
+* phi3.5-moe     — MoE 16e top-2, GQA(32q/8kv)
+
+The layer stack is a ``jax.lax.scan`` over stacked per-layer params — one
+layer's HLO regardless of depth (compile time and HLO size stay flat at
+62-64 layers), with a remat policy on the scanned body (nothing saved but
+the block inputs: activation memory is O(S·d) per layer, recompute in the
+backward pass — the standard MaxText recipe).
+
+``long_500k`` uses the sliding-window attention mode (window 4096) with a
+ring KV cache of window size — the sub-quadratic long-context path
+(DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .layers import Dtype
+from .moe import init_moe, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qk_norm: bool = False
+    attn: str = "gqa"            # "gqa" | "mla"
+    # MLA dims (minicpm3)
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    nope_dim: int = 64
+    rope_dim: int = 32
+    v_dim: int = 64
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_groups: int = 1          # dispatch groups (set to the dp extent)
+    # misc
+    rope_theta: float = 1e6
+    window: int | None = None    # sliding-window attention (long-context)
+    vocab_pad_to: int = 512      # pad vocab so it shards evenly
+    kv_chunk: int = 1024
+    # mesh wiring (None on CPU tests; set by the production launcher)
+    dp_spec: Any = None          # axis (or tuple) the batch shards over
+    tp_axis: Any = None          # the tensor-parallel axis name
+    mesh: Any = None             # the Mesh (enables the shard_map MoE path)
+    sp_axis: Any = None          # sequence-parallel axis for activations:
+    #                              the scan carry (and saved remat residual)
+    #                              is sharded (dp, sp, None) between layers —
+    #                              cuts checkpointed activation memory by tp×
+    #                              (Megatron-SP; the MaxText recipe)
+    unroll_layers: bool = False  # unroll the layer scan (exact HLO cost
+    #                              accounting in the dry-run; scan keeps the
+    #                              compiled program small in production)
+    # §Perf optimization flags (False reproduces the paper-faithful
+    # baseline measured first in EXPERIMENTS.md)
+    bf16_combine: bool = False   # bf16 TP-combine all-reduces (H1)
+    flash_p_bf16: bool = False   # bf16 attention probability tiles (H3)
+    moe_ep_pad: bool = False     # pad experts to tp multiple -> EP (H2)
+    attn_head_shard: bool = False  # pin flash carry head-sharded (H4)
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return -(-self.vocab // m) * m
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND MODEL_FLOPS accounting)."""
+        d, f, V = self.d_model, self.d_ff, self.padded_vocab
+        if self.attn == "mla":
+            qk = self.nope_dim + self.rope_dim
+            attn = (d * self.q_lora_rank + self.q_lora_rank * self.n_heads * qk
+                    + d * (self.kv_lora_rank + self.rope_dim)
+                    + self.kv_lora_rank * self.n_heads * (self.nope_dim + self.v_dim)
+                    + self.n_heads * self.v_dim * d)
+        else:
+            attn = d * self.head_dim * (self.n_heads + 2 * self.n_kv) \
+                + self.n_heads * self.head_dim * d
+        if self.moe:
+            ffn = self.n_experts * 3 * d * f + d * self.n_experts
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * V * d + d
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE counts top_k experts)."""
+        if not self.moe:
+            return self.param_count()
+        d, f, V = self.d_model, self.d_ff, self.padded_vocab
+        attn = d * self.head_dim * (self.n_heads + 2 * self.n_kv) \
+            + self.n_heads * self.head_dim * d
+        ffn = self.top_k * 3 * d * f + d * self.n_experts
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * V * d + d
+
+
+# -- parameter init ------------------------------------------------------------
+
+def init_layer(key, cfg: LMConfig) -> dict:
+    ka, kf = jax.random.split(key)
+    if cfg.attn == "mla":
+        attn = L.init_mla(ka, cfg.d_model, cfg.n_heads,
+                          q_lora_rank=cfg.q_lora_rank,
+                          kv_lora_rank=cfg.kv_lora_rank,
+                          nope_dim=cfg.nope_dim, rope_dim=cfg.rope_dim,
+                          v_dim=cfg.v_dim)
+    else:
+        attn = L.init_gqa(ka, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                          cfg.head_dim, cfg.qk_norm)
+    if cfg.moe:
+        ffn = init_moe(kf, cfg.d_model, cfg.d_ff, cfg.n_experts)
+    else:
+        ffn = L.init_swiglu(kf, cfg.d_model, cfg.d_ff)
+    return {
+        "attn": attn,
+        "ffn": ffn,
+        "ln1": jnp.ones((cfg.d_model,), Dtype),
+        "ln2": jnp.ones((cfg.d_model,), Dtype),
+    }
+
+
+def init_params(key, cfg: LMConfig) -> dict:
+    ke, kl, ko = jax.random.split(key, 3)
+    V = cfg.padded_vocab
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    s = 1.0 / math.sqrt(cfg.d_model)
+    return {
+        "embed": jax.random.normal(ke, (V, cfg.d_model), Dtype) * s,
+        "layers": stacked,
+        "ln_f": jnp.ones((cfg.d_model,), Dtype),
+        "unembed": jax.random.normal(ko, (cfg.d_model, V), Dtype) * s,
+    }
+
+
+def init_params_shape(cfg: LMConfig) -> Any:
+    """ShapeDtypeStruct pytree (for the no-allocation dry-run)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.random.key(0))
+
+
+# -- forward -------------------------------------------------------------------
+
+def _sp_constrain(cfg: LMConfig, x: jax.Array) -> jax.Array:
+    """Shard the (B, S, d) inter-layer activation (dp, sp, None)."""
+    if cfg.sp_axis is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(cfg.dp_spec, cfg.sp_axis, None))
+
+
+def _layer_fwd(cfg: LMConfig, x: jax.Array, lp: dict,
+               positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    h = L.rms_norm(x, lp["ln1"])
+    if cfg.attn == "mla":
+        a = L.mla_attention(lp["attn"], h, positions, n_heads=cfg.n_heads,
+                            nope_dim=cfg.nope_dim, rope_dim=cfg.rope_dim,
+                            v_dim=cfg.v_dim, kv_lora_rank=cfg.kv_lora_rank,
+                            rope_theta=cfg.rope_theta, kv_chunk=cfg.kv_chunk,
+                            window=cfg.window, p_bf16=cfg.flash_p_bf16,
+                            bf16_combine=cfg.bf16_combine,
+                            attn_shard=((cfg.dp_spec, cfg.tp_axis)
+                                        if cfg.attn_head_shard else None))
+    else:
+        a = L.gqa_attention(lp["attn"], h, positions, n_heads=cfg.n_heads,
+                            n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                            rope_theta=cfg.rope_theta, window=cfg.window,
+                            kv_chunk=cfg.kv_chunk, p_bf16=cfg.flash_p_bf16,
+                            bf16_combine=cfg.bf16_combine,
+                            attn_shard=((cfg.dp_spec, cfg.tp_axis)
+                                        if cfg.attn_head_shard else None))
+    x = x + a
+    h = L.rms_norm(x, lp["ln2"])
+    if cfg.moe:
+        B, S, d = h.shape
+        out, aux = moe_ffn(lp["ffn"], h.reshape(B * S, d),
+                           n_experts=cfg.n_experts, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           num_groups=cfg.moe_groups,
+                           dp_spec=cfg.dp_spec, tp_axis=cfg.tp_axis,
+                           mesh=cfg.mesh, ep_pad=cfg.moe_ep_pad)
+        return x + out.reshape(B, S, d), aux
+    return x + L.swiglu(h, bf16_combine=cfg.bf16_combine,
+                        **lp["ffn"]), jnp.zeros((), jnp.float32)
+
+
+def forward(params: dict, cfg: LMConfig, tokens: jax.Array
+            ) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) int32 -> (logits (B, S, V), aux_loss)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]                     # gather (B, S, d)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(carry, lp):
+        x, aux = carry
+        y, a = _layer_fwd(cfg, x, lp, positions)
+        return (_sp_constrain(cfg, y), aux + a), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body, (_sp_constrain(cfg, x),
+                                      jnp.zeros((), jnp.float32)),
+                               params["layers"],
+                               unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = L.rms_norm(x, params["ln_f"])
+    if cfg.bf16_combine:
+        logits = jnp.dot(x, params["unembed"]).astype(jnp.float32)
+    else:
+        logits = jnp.dot(x, params["unembed"],
+                         preferred_element_type=jnp.float32)
+    return logits, aux
+
+
+def lm_loss(params: dict, cfg: LMConfig, tokens: jax.Array,
+            targets: jax.Array) -> jax.Array:
+    logits, aux = forward(params, cfg, tokens)
+    V = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = jnp.mean(lse - gold)
+    return nll + 0.01 * aux
+
+
+# -- decode path ----------------------------------------------------------------
+
+def init_cache_shape(cfg: LMConfig, batch: int, s_cache: int) -> Any:
+    """ShapeDtypeStructs of the per-layer KV cache (stacked on layer dim).
+    GQA: (L, B, S, KH, D) k and v; MLA: (L, B, S, r) latent + (L, B, S, rd)."""
+    if cfg.attn == "mla":
+        return {
+            "ckv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, s_cache, cfg.kv_lora_rank), Dtype),
+            "krope": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, s_cache, cfg.rope_dim), Dtype),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, s_cache, cfg.n_kv, cfg.head_dim), Dtype),
+        "v": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, s_cache, cfg.n_kv, cfg.head_dim), Dtype),
+    }
+
+
+def decode_step(params: dict, cfg: LMConfig, token: jax.Array,
+                cache: dict, position: jax.Array
+                ) -> tuple[jax.Array, dict]:
+    """One serving step: token (B,) int32, position (B,) int32 (absolute
+    index of the new token), cache dict of stacked per-layer buffers.
+    Returns (logits (B, V), new cache)."""
+    B = token.shape[0]
+    x = params["embed"][token][:, None, :]          # (B, 1, d)
+
+    if cfg.attn == "mla":
+        caches = (cache["ckv"], cache["krope"])
+    else:
+        caches = (cache["k"], cache["v"])
+
+    def body(carry, inp):
+        x = carry
+        lp, c1, c2 = inp
+        h = L.rms_norm(x, lp["ln1"])
+        if cfg.attn == "mla":
+            a, n1, n2 = L.mla_decode(lp["attn"], h, c1, c2, position,
+                                     n_heads=cfg.n_heads,
+                                     nope_dim=cfg.nope_dim,
+                                     rope_dim=cfg.rope_dim, v_dim=cfg.v_dim,
+                                     kv_lora_rank=cfg.kv_lora_rank,
+                                     rope_theta=cfg.rope_theta)
+        else:
+            a, n1, n2 = L.gqa_decode(lp["attn"], h, c1, c2, position,
+                                     n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                     head_dim=cfg.head_dim,
+                                     rope_theta=cfg.rope_theta)
+        x = x + a
+        h = L.rms_norm(x, lp["ln2"])
+        if cfg.moe:
+            out, _ = moe_ffn(lp["ffn"], h.reshape(B, -1),
+                             n_experts=cfg.n_experts, top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             num_groups=cfg.moe_groups,
+                             dp_spec=cfg.dp_spec, tp_axis=cfg.tp_axis,
+                             mesh=cfg.mesh, ep_pad=cfg.moe_ep_pad)
+            x = x + out.reshape(B, 1, -1)
+        else:
+            x = x + L.swiglu(h, **lp["ffn"])
+        return x, (n1, n2)
+
+    x, new_caches = jax.lax.scan(
+        body, x, (params["layers"],) + caches,
+        unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = L.rms_norm(x, params["ln_f"])
+    logits = jnp.dot(x[:, 0, :], params["unembed"],
+                     preferred_element_type=jnp.float32)
+    if cfg.attn == "mla":
+        new_cache = {"ckv": new_caches[0], "krope": new_caches[1]}
+    else:
+        new_cache = {"k": new_caches[0], "v": new_caches[1]}
+    return logits, new_cache
+
+
+def prefill(params: dict, cfg: LMConfig, tokens: jax.Array
+            ) -> tuple[jax.Array, dict]:
+    """Prefill: run the full forward, return last-position logits and the
+    populated KV cache (stacked per layer)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"])
+        if cfg.attn == "mla":
+            kv_a = L.dense(h, lp["attn"]["wkv_a"])
+            c_kv, k_rope = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+            c_kv = L.rms_norm(c_kv, lp["attn"]["kv_a_norm"])
+            cos, sin = L.rope_angles(positions, cfg.rope_dim, cfg.rope_theta)
+            k_rope = L.apply_rope(k_rope.reshape(B, S, 1, cfg.rope_dim),
+                                  cos, sin).reshape(B, S, cfg.rope_dim)
+            a = L.mla_attention(lp["attn"], h, positions,
+                                n_heads=cfg.n_heads, nope_dim=cfg.nope_dim,
+                                rope_dim=cfg.rope_dim, v_dim=cfg.v_dim,
+                                kv_lora_rank=cfg.kv_lora_rank,
+                                rope_theta=cfg.rope_theta,
+                                kv_chunk=cfg.kv_chunk, window=cfg.window)
+            kv_out = (c_kv, k_rope)
+        else:
+            q = L.dense(h, lp["attn"]["wk"])  # recompute k/v for the cache
+            k = q.reshape(B, S, cfg.n_kv, cfg.head_dim)
+            v = L.dense(h, lp["attn"]["wv"]).reshape(B, S, cfg.n_kv,
+                                                     cfg.head_dim)
+            if "k_norm" in lp["attn"]:
+                k = L.rms_norm(k, lp["attn"]["k_norm"])
+            cos, sin = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+            k = L.apply_rope(k, cos, sin)
+            a = L.gqa_attention(lp["attn"], h, positions,
+                                n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                                head_dim=cfg.head_dim,
+                                rope_theta=cfg.rope_theta, window=cfg.window,
+                                kv_chunk=cfg.kv_chunk)
+            kv_out = (k, v)
+        x = x + a
+        h = L.rms_norm(x, lp["ln2"])
+        if cfg.moe:
+            out, _ = moe_ffn(lp["ffn"], h.reshape(B * S, -1),
+                             n_experts=cfg.n_experts, top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             num_groups=cfg.moe_groups,
+                             dp_spec=cfg.dp_spec, tp_axis=cfg.tp_axis,
+                             mesh=cfg.mesh, ep_pad=cfg.moe_ep_pad)
+            x = x + out.reshape(B, S, -1)
+        else:
+            x = x + L.swiglu(h, **lp["ffn"])
+        return _sp_constrain(cfg, x), kv_out
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, kvs = jax.lax.scan(body, x, params["layers"],
+                          unroll=cfg.n_layers if cfg.unroll_layers else 1)
+    x = L.rms_norm(x, params["ln_f"])
+    logits = jnp.dot(x[:, -1, :], params["unembed"],
+                     preferred_element_type=jnp.float32)
+    if cfg.attn == "mla":
+        cache = {"ckv": kvs[0], "krope": kvs[1]}
+    else:
+        cache = {"k": kvs[0], "v": kvs[1]}
+    return logits, cache

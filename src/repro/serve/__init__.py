@@ -1,0 +1,4 @@
+from .engine import ServeConfig, DecodeEngine
+from .query_serve import QueryServer
+
+__all__ = ["ServeConfig", "DecodeEngine", "QueryServer"]

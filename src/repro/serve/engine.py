@@ -1,0 +1,113 @@
+"""LM serving engine: continuous-batching decode over a stacked KV cache.
+
+The cache layout is (L, B, S_cache, ...) — one buffer slot per batch lane.
+A lane is a *sequence slot*: when a sequence finishes (EOS / max_len) its
+lane is immediately refilled from the waiting queue (continuous batching —
+the serving-throughput trick of vLLM/Orca, expressed with static shapes:
+the batch is fixed at ``max_batch``, occupancy is a boolean mask).
+
+Positions are per-lane, so lanes decode at different depths concurrently;
+the attention mask in ``gqa_decode``/``mla_decode`` validates only entries
+``<= position``.  For the ``long_500k`` shape the cache is a ring buffer of
+``window`` slots (sliding-window attention) — position wraps modulo the
+window, exactly the Mistral recipe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int
+    s_cache: int
+    max_new_tokens: int = 64
+    eos_id: int = 1
+
+
+class DecodeEngine:
+    def __init__(self, params: Any, cfg: T.LMConfig, serve_cfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        shapes = T.init_cache_shape(cfg, serve_cfg.max_batch,
+                                    serve_cfg.s_cache)
+        self.cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+        B = serve_cfg.max_batch
+        self.positions = np.zeros(B, dtype=np.int32)
+        self.live = np.zeros(B, dtype=bool)
+        self.tokens = np.zeros(B, dtype=np.int32)
+        self.outputs: list[list[int]] = [[] for _ in range(B)]
+        self.queue: list[np.ndarray] = []          # waiting prompts
+        self.finished: list[list[int]] = []
+        self._step = jax.jit(
+            lambda p, t, c, pos: T.decode_step(p, cfg, t, c, pos))
+        self._prefill = jax.jit(lambda p, t: T.prefill(p, cfg, t))
+
+    # -- request management ------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray) -> None:
+        self.queue.append(np.asarray(prompt, dtype=np.int32))
+
+    def _admit(self) -> None:
+        """Fill free lanes from the queue (continuous batching)."""
+        for lane in np.nonzero(~self.live)[0]:
+            if not self.queue:
+                break
+            prompt = self.queue.pop(0)
+            # single-sequence prefill into the lane
+            logits, cache = self._prefill(self.params, prompt[None, :])
+            nxt = int(jnp.argmax(logits[0]))
+            S = prompt.shape[0]
+
+            def write(lane_buf, new_kv):
+                # lane_buf (L, B, S_cache, ...), new_kv (L, 1, S, ...)
+                return lane_buf.at[:, lane, :S].set(new_kv[:, 0])
+
+            self.cache = jax.tree.map(write, self.cache, cache)
+            self.positions[lane] = S
+            self.tokens[lane] = nxt
+            self.outputs[lane] = [nxt]
+            self.live[lane] = True
+
+    # -- one decode tick -----------------------------------------------------------
+
+    def tick(self) -> int:
+        """Admit + one batched decode step.  Returns #live lanes."""
+        self._admit()
+        if not self.live.any():
+            return 0
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(self.tokens), self.cache,
+            jnp.asarray(self.positions))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        for lane in np.nonzero(self.live)[0]:
+            tok = int(nxt[lane])
+            self.outputs[lane].append(tok)
+            self.positions[lane] += 1
+            self.tokens[lane] = tok
+            done = (tok == self.scfg.eos_id
+                    or len(self.outputs[lane]) >= self.scfg.max_new_tokens
+                    or self.positions[lane] >= self.scfg.s_cache)
+            if done:
+                self.finished.append(self.outputs[lane])
+                self.outputs[lane] = []
+                self.live[lane] = False
+        return int(self.live.sum())
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[list[int]]:
+        for _ in range(max_ticks):
+            n = self.tick()
+            if n == 0 and not self.queue:
+                break
+        return self.finished

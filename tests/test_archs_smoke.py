@@ -1,0 +1,245 @@
+"""Per-architecture smoke tests: instantiate the REDUCED config of each
+assigned architecture and run one forward/train step on CPU, asserting
+output shapes and no NaNs (assignment contract)."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.models import gnn as G
+from repro.models import recsys as R
+from repro.models import transformer as T
+
+LM_ARCHS = ["qwen3-32b", "yi-6b", "minicpm3-4b", "granite-moe-3b-a800m",
+            "phi3.5-moe-42b-a6.6b"]
+
+
+def test_registry_complete():
+    names = list_archs()
+    for a in LM_ARCHS + ["gcn-cora", "bert4rec", "bst", "sasrec", "deepfm",
+                         "repair-ir"]:
+        assert a in names
+    # every assigned arch exposes its 4 shapes
+    for a in names:
+        arch = get_arch(a)
+        if arch.family in ("lm", "gnn", "recsys"):
+            assert len(arch.shapes) == 4
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_forward_and_train_step(name):
+    arch = get_arch(name)
+    cfg = arch.smoke_config
+    params = T.init_params(jax.random.key(0), cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    logits, aux = T.forward(params, cfg, toks)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+    # one jitted grad step
+    loss_fn = lambda p: T.lm_loss(p, cfg, toks, toks)
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_decode_step(name):
+    arch = get_arch(name)
+    cfg = arch.smoke_config
+    params = T.init_params(jax.random.key(0), cfg)
+    B, S_cache = 2, 32
+    shapes = T.init_cache_shape(cfg, B, S_cache)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    tok = jnp.zeros((B,), jnp.int32)
+    pos = jnp.asarray([0, 3], jnp.int32)
+    logits, nc = T.decode_step(params, cfg, tok, cache, pos)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+    assert jax.tree.structure(nc) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_prefill_matches_forward(name):
+    """Prefill logits at the last position equal forward logits there."""
+    arch = get_arch(name)
+    cfg = arch.smoke_config
+    params = T.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(2), (2, 8), 0, cfg.vocab)
+    full, _ = T.forward(params, cfg, toks)
+    last, cache = T.prefill(params, cfg, toks)
+    if not cfg.moe:  # MoE capacity differs between the two call shapes
+        np.testing.assert_allclose(np.asarray(last, np.float32),
+                                   np.asarray(full[:, -1, :], np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_lm_sliding_window_attention():
+    """long_500k mode: windowed attention must differ from full attention
+    on sequences longer than the window, and must not NaN."""
+    arch = get_arch("yi-6b")
+    cfg = arch.smoke_config
+    cfg_w = dataclasses.replace(cfg, window=4)
+    params = T.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(3), (1, 16), 0, cfg.vocab)
+    full, _ = T.forward(params, cfg, toks)
+    win, _ = T.forward(params, cfg_w, toks)
+    assert not bool(jnp.isnan(win).any())
+    assert not np.allclose(np.asarray(full, np.float32),
+                           np.asarray(win, np.float32))
+
+
+def test_gcn_full_graph_train_step(rng):
+    arch = get_arch("gcn-cora")
+    cfg = arch.smoke_config
+    N, E = 40, 160
+    src = rng.integers(0, N, size=E)
+    dst = rng.integers(0, N, size=E)
+    norm = G.edge_norm_for(src, dst, N, cfg.aggregator)
+    feats = rng.normal(size=(N, cfg.d_feat)).astype(np.float32)
+    labels = rng.integers(0, cfg.n_classes, size=N).astype(np.int32)
+    mask = (rng.random(N) < 0.5).astype(np.float32)
+    params = G.init_params(jax.random.key(0), cfg)
+    logits = G.forward(params, cfg, jnp.asarray(feats), jnp.asarray(src),
+                       jnp.asarray(dst), jnp.asarray(norm))
+    assert logits.shape == (N, cfg.n_classes)
+    assert not bool(jnp.isnan(logits).any())
+    loss, grads = jax.value_and_grad(
+        lambda p: G.loss_fn(p, cfg, jnp.asarray(feats), jnp.asarray(src),
+                            jnp.asarray(dst), jnp.asarray(norm),
+                            jnp.asarray(labels), jnp.asarray(mask)))(params)
+    assert np.isfinite(float(loss))
+
+
+def test_gcn_neighbor_sampler_and_minibatch(rng):
+    arch = get_arch("gcn-cora")
+    cfg = arch.smoke_config
+    N, E = 200, 1200
+    src = rng.integers(0, N, size=E)
+    dst = rng.integers(0, N, size=E)
+    graph = G.CSRGraph(src, dst, N)
+    seeds = rng.choice(N, size=8, replace=False)
+    fanouts = [3, 2]
+    frontiers = G.sample_subgraph(graph, seeds, fanouts, rng)
+    assert len(frontiers) == 3
+    assert frontiers[0].size == 8
+    assert frontiers[1].size == 8 * 3
+    assert frontiers[2].size == 8 * 3 * 2
+    # sampled neighbors really are neighbors (or self for isolated)
+    for parent, child in zip(np.repeat(frontiers[0], 3), frontiers[1]):
+        nbrs = graph.nbr[graph.offsets[parent]:graph.offsets[parent + 1]]
+        assert child in nbrs or child == parent
+    feats = rng.normal(size=(frontiers[-1].size, cfg.d_feat)).astype(np.float32)
+    params = G.init_params(jax.random.key(0), cfg)
+    out = G.minibatch_forward(params, cfg, jnp.asarray(feats), fanouts)
+    assert out.shape == (8, cfg.n_classes)
+    assert not bool(jnp.isnan(out).any())
+
+
+def test_gcn_molecule_batched(rng):
+    """Batched small graphs via segment-id offsets: one flat segment_sum."""
+    arch = get_arch("gcn-cora")
+    cfg = arch.smoke_config
+    B, n, e = 16, 8, 20
+    src = np.concatenate([rng.integers(0, n, size=e) + g * n
+                          for g in range(B)])
+    dst = np.concatenate([rng.integers(0, n, size=e) + g * n
+                          for g in range(B)])
+    N = B * n
+    norm = G.edge_norm_for(src, dst, N, "mean")
+    feats = rng.normal(size=(N, cfg.d_feat)).astype(np.float32)
+    params = G.init_params(jax.random.key(0), cfg)
+    logits = G.forward(params, cfg, jnp.asarray(feats), jnp.asarray(src),
+                       jnp.asarray(dst), jnp.asarray(norm))
+    assert logits.shape == (N, cfg.n_classes)
+    # cross-graph isolation: messages never cross the per-graph blocks
+    # (guaranteed by offset segment ids; spot-check by zeroing one graph)
+    feats2 = feats.copy()
+    feats2[:n] = 0
+    l2 = G.forward(params, cfg, jnp.asarray(feats2), jnp.asarray(src),
+                   jnp.asarray(dst), jnp.asarray(norm))
+    np.testing.assert_allclose(np.asarray(logits[n:]), np.asarray(l2[n:]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_deepfm_forward_and_loss(rng):
+    arch = get_arch("deepfm")
+    cfg = arch.smoke_config
+    params = R.deepfm_init(jax.random.key(0), cfg)
+    B = 32
+    offs = np.concatenate([[0], np.cumsum(cfg.field_vocabs)[:-1]])
+    ids = (rng.integers(0, 64, size=(B, cfg.n_fields)) + offs).astype(np.int32)
+    logits = R.deepfm_forward(params, cfg, jnp.asarray(ids))
+    assert logits.shape == (B,)
+    labels = (rng.random(B) < 0.5).astype(np.float32)
+    loss, grads = jax.value_and_grad(
+        lambda p: R.deepfm_loss(p, cfg, jnp.asarray(ids),
+                                jnp.asarray(labels)))(params)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("name", ["sasrec", "bert4rec"])
+def test_seqrec_train_and_retrieval(name, rng):
+    arch = get_arch(name)
+    cfg = arch.smoke_config
+    params = R.seqrec_init(jax.random.key(0), cfg)
+    B = 8
+    seq = rng.integers(0, cfg.n_items, size=(B, cfg.seq_len)).astype(np.int32)
+    h = R.seqrec_encode(params, cfg, jnp.asarray(seq))
+    assert h.shape == (B, cfg.seq_len, cfg.embed_dim)
+    negs = rng.integers(0, cfg.n_items, size=(cfg.n_neg,)).astype(np.int32)
+    if name == "bert4rec":
+        M = 4
+        mpos = rng.integers(0, cfg.seq_len, size=(B, M)).astype(np.int32)
+        mtgt = rng.integers(0, cfg.n_items, size=(B, M)).astype(np.int32)
+        loss = R.bert4rec_masked_loss(params, cfg, jnp.asarray(seq),
+                                      jnp.asarray(mpos), jnp.asarray(mtgt),
+                                      jnp.asarray(negs))
+    else:
+        tgt = rng.integers(0, cfg.n_items, size=(B, cfg.seq_len)).astype(np.int32)
+        loss = R.seqrec_sampled_loss(params, cfg, jnp.asarray(seq),
+                                     jnp.asarray(tgt), jnp.asarray(negs))
+    assert np.isfinite(float(loss))
+    cands = rng.integers(0, cfg.n_items, size=(64,)).astype(np.int32)
+    scores = R.seqrec_score_candidates(params, cfg, jnp.asarray(seq),
+                                       jnp.asarray(cands))
+    assert scores.shape == (B, 64)
+    assert not bool(jnp.isnan(scores).any())
+
+
+def test_bst_forward_and_loss(rng):
+    arch = get_arch("bst")
+    cfg = arch.smoke_config
+    params = R.seqrec_init(jax.random.key(0), cfg)
+    B = 8
+    seq = rng.integers(0, cfg.n_items, size=(B, cfg.seq_len)).astype(np.int32)
+    tgt = rng.integers(0, cfg.n_items, size=(B,)).astype(np.int32)
+    logits = R.bst_forward(params, cfg, jnp.asarray(seq), jnp.asarray(tgt))
+    assert logits.shape == (B,)
+    labels = (rng.random(B) < 0.5).astype(np.float32)
+    loss = R.bst_loss(params, cfg, jnp.asarray(seq), jnp.asarray(tgt),
+                      jnp.asarray(labels))
+    assert np.isfinite(float(loss))
+
+
+def test_embedding_bag_matches_manual(rng):
+    table = rng.normal(size=(50, 8)).astype(np.float32)
+    idx = np.asarray([3, 7, 7, 1, 0, 9], dtype=np.int32)
+    offs = np.asarray([0, 2, 2, 5, 6], dtype=np.int32)  # bags: [3,7],[],[7,1,0],[9]
+    out = R.embedding_bag(jnp.asarray(table), jnp.asarray(idx),
+                          jnp.asarray(offs))
+    assert out.shape == (4, 8)
+    np.testing.assert_allclose(np.asarray(out[0]), table[3] + table[7],
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out[2]),
+                               table[7] + table[1] + table[0], rtol=1e-6)
+    fixed = R.embedding_bag_fixed(jnp.asarray(table),
+                                  jnp.asarray(idx[:4].reshape(2, 2)))
+    np.testing.assert_allclose(np.asarray(fixed[0]), table[3] + table[7],
+                               rtol=1e-6)

@@ -1,0 +1,84 @@
+"""Baseline gap codecs (VByte / Rice / gamma / delta) round-trip and
+relative-size sanity (§5's competitors)."""
+
+import numpy as np
+import pytest
+
+from repro.core import codecs as CD
+
+
+@pytest.mark.parametrize("codec", ["vbyte", "rice", "gamma", "delta"])
+def test_roundtrip(lists, codec):
+    u = max(int(l[-1]) for l in lists) + 1
+    enc = CD.encode_lists(lists, codec, k=8, universe=u)
+    for i, pl in enumerate(lists):
+        np.testing.assert_array_equal(enc.decode(i), pl)
+
+
+@pytest.mark.parametrize("codec", ["vbyte", "rice", "gamma", "delta"])
+def test_next_geq(lists, codec, rng):
+    u = max(int(l[-1]) for l in lists) + 1
+    enc = CD.encode_lists(lists, codec, k=8, universe=u)
+    for i in range(0, len(lists), 4):
+        arr = lists[i]
+        for x in np.sort(rng.integers(0, u, size=15)):
+            t = 0
+            got, t = enc.next_geq_from(i, int(x), t)
+            pos = np.searchsorted(arr, x)
+            want = int(arr[pos]) if pos < len(arr) else None
+            assert got == want, f"{codec} list {i} x {x}"
+
+
+def test_next_geq_resumable(lists):
+    """Rising queries with a carried bracket must stay exact."""
+    u = max(int(l[-1]) for l in lists) + 1
+    enc = CD.encode_lists(lists, "vbyte", k=8, universe=u)
+    i = max(range(len(lists)), key=lambda i: len(lists[i]))
+    arr = lists[i]
+    t = 0
+    for x in arr[::3]:
+        got, t = enc.next_geq_from(i, int(x), t)
+        assert got == int(x)
+
+
+def test_svs_encoded(lists, rng):
+    u = max(int(l[-1]) for l in lists) + 1
+    enc = CD.encode_lists(lists, "vbyte", k=8, universe=u)
+    for _ in range(15):
+        i, j = rng.choice(len(lists), 2, replace=False)
+        if len(lists[i]) > len(lists[j]):
+            i, j = j, i
+        oracle = np.intersect1d(lists[i], lists[j])
+        got = CD.svs_encoded(lists[i], enc, int(j))
+        np.testing.assert_array_equal(got, oracle)
+
+
+def test_rice_beats_vbyte_on_small_gaps(rng):
+    """Paper §5: Rice is the most space-efficient difference coder."""
+    dense = [np.sort(rng.choice(2000, size=800, replace=False))
+             for _ in range(10)]
+    u = 2000
+    rice = CD.encode_lists(dense, "rice", universe=u)
+    vb = CD.encode_lists(dense, "vbyte", universe=u)
+    assert rice.size_bits(False) < vb.size_bits(False)
+
+
+def test_vbyte_single_values():
+    for v in [0, 1, 127, 128, 300, 2**20]:
+        enc = CD.vbyte_encode(np.asarray([v]))
+        dec, _ = CD.vbyte_decode(enc, 1)
+        assert dec[0] == v
+
+
+def test_bit_codecs_roundtrip_raw(rng):
+    gaps = rng.integers(1, 1000, size=50).astype(np.int64)
+    b = CD.rice_parameter(gaps)
+    enc = CD.rice_encode(gaps, b)
+    dec, _ = CD.rice_decode(enc, gaps.size, b)
+    np.testing.assert_array_equal(dec, gaps)
+    enc = CD.gamma_encode(gaps)
+    dec, _ = CD.gamma_decode(enc, gaps.size)
+    np.testing.assert_array_equal(dec, gaps)
+    enc = CD.delta_encode(gaps)
+    dec, _ = CD.delta_decode(enc, gaps.size)
+    np.testing.assert_array_equal(dec, gaps)

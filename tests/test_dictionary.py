@@ -1,0 +1,100 @@
+"""Forest dictionary (R_B/R_S) representation: §2.3 invariants."""
+
+import numpy as np
+
+from repro.core.dictionary import build_forest, map_c_symbols
+from repro.core.repair import repair_compress
+
+
+def test_bitmap_balance(repair_result):
+    """Every tree in the forest closes: total #0s == #1s + #roots."""
+    forest = build_forest(repair_result.grammar)
+    rb = forest.rb
+    ones = int((rb == 1).sum())
+    zeros = int((rb == 0).sum())
+    assert ones == repair_result.grammar.num_rules  # one 1-bit per rule
+    assert zeros == forest.rs.size
+
+
+def test_rs_full_alignment(repair_result):
+    """§3.2: phrase sums sit at the 1-positions, leaf data at 0-positions
+    — 'rank is not anymore necessary'."""
+    forest = build_forest(repair_result.grammar)
+    g = repair_result.grammar
+    for r in range(g.num_rules):
+        pos = int(forest.pos_of_rule[r])
+        assert forest.rb[pos] == 1
+        assert forest.rs_full[pos] == g.sums[r]
+
+
+def test_rank0_consistency(repair_result):
+    forest = build_forest(repair_result.grammar)
+    for i in range(min(200, forest.rb.size)):
+        if forest.rb[i] == 0:
+            # leaf value at position i is rs[rank0(i) - 1] (paper's
+            # 1-based rank_0 formula)
+            assert forest.rs_full[i] == forest.rs[forest.rank0(i) - 1]
+
+
+def test_expansion_matches_grammar(repair_result):
+    g = repair_result.grammar
+    forest = build_forest(g)
+    for r in range(g.num_rules):
+        want = g.expand_symbol(g.num_terminals + r)
+        got = forest.expand_at(int(forest.pos_of_rule[r]))
+        assert want == got
+
+
+def test_subtree_end_scan(repair_result):
+    """'traverse R_B ... until we have seen more 0s than 1s'."""
+    forest = build_forest(repair_result.grammar)
+    for r in range(min(100, repair_result.grammar.num_rules)):
+        pos = int(forest.pos_of_rule[r])
+        end = forest.subtree_end(pos)
+        seg = forest.rb[pos:end]
+        assert (seg == 0).sum() == (seg == 1).sum() + 1  # balanced + close
+
+
+def test_each_rule_inlined_at_most_once(repair_result):
+    """A rule's tree is inlined at ONE occurrence; other references are
+    leaf pointers >= num_terminals."""
+    forest = build_forest(repair_result.grammar)
+    g = repair_result.grammar
+    # count subtree starts: every rule has exactly one 1-bit
+    assert (forest.pos_of_rule >= 0).all()
+    assert np.unique(forest.pos_of_rule).size == g.num_rules
+
+
+def test_map_c_symbols(repair_result):
+    forest = build_forest(repair_result.grammar)
+    mapped = map_c_symbols(repair_result, forest)
+    nt = repair_result.grammar.num_terminals
+    for orig, m in zip(repair_result.seq[:500], mapped[:500]):
+        if orig < nt:
+            assert m == orig
+        else:
+            assert m >= nt
+            # mapped id points at the rule's 1-bit position
+            pos = int(m) - nt
+            assert forest.rule_of_pos[pos] == int(orig) - nt
+
+
+def test_paper_worked_example():
+    """Figure 1: lists alpha=(1,3,5,7), beta=(2,4,9,10,11), gamma=(1,2,4,
+    5,7,9,10,12) -> rules A->1 2, B->2 2, C->1 4, D->A A with C = 1 9 2 9
+    6 1 6 (in forest addressing).  We verify the *semantic* content: gaps,
+    phrase sums and the D expansion 1212."""
+    alpha = np.asarray([1, 3, 5, 7])
+    beta = np.asarray([2, 4, 9, 10, 11])
+    gamma = np.asarray([1, 2, 4, 5, 7, 9, 10, 12])
+    res = repair_compress([alpha, beta, gamma], exact=True)
+    for i, l in enumerate([alpha, beta, gamma]):
+        np.testing.assert_array_equal(res.decode_list(i), l)
+    g = res.grammar
+    # the most frequent pair of gaps is (1,2) -> first rule must be 1 2
+    assert tuple(g.rules[0]) == (1, 2)
+    assert g.sums[0] == 3
+    # some rule expands to 1212 (the paper's D) when enough rules form
+    expansions = {tuple(g.expand_symbol(g.num_terminals + r))
+                  for r in range(g.num_rules)}
+    assert (1, 2, 1, 2) in expansions or g.num_rules < 4  # small input

@@ -1,0 +1,54 @@
+"""Secondary-memory index (paper §1/§6): same results as RAM, and the
+contiguous-block I/O bound holds."""
+
+import numpy as np
+import pytest
+
+from repro.core import intersect as I
+from repro.core.diskindex import build_disk_index
+from repro.core.repair import repair_compress
+
+
+@pytest.fixture(scope="module")
+def disk(lists, repair_result, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("disk") / "c.bin")
+    return build_disk_index(repair_result, path)
+
+
+def test_disk_decode_matches(lists, disk):
+    for i in range(len(lists)):
+        np.testing.assert_array_equal(disk.list_view(i).decode(), lists[i])
+
+
+def test_disk_next_geq(lists, disk, rng):
+    for i in range(0, len(lists), 5):
+        cl = disk.list_view(i)
+        cur = cl.cursor()
+        arr = lists[i]
+        for x in np.sort(rng.integers(0, disk.universe, size=20)):
+            got = cl.next_geq(int(x), cur)
+            pos = np.searchsorted(arr, x)
+            want = int(arr[pos]) if pos < len(arr) else None
+            assert got == want
+
+
+def test_disk_intersection_matches_ram(lists, repair_result, disk, rng):
+    for _ in range(20):
+        i, j = rng.choice(len(lists), 2, replace=False)
+        if len(lists[i]) > len(lists[j]):
+            i, j = j, i
+        oracle = np.intersect1d(lists[i], lists[j])
+        short = disk.list_view(int(i)).decode()
+        got = I._svs_core(short, disk.list_view(int(j)))
+        np.testing.assert_array_equal(got, oracle)
+
+
+def test_io_optimality_bound(lists, repair_result, disk):
+    """Paper: retrieval of list i touches at most 1 + ceil((l~-1)/B)
+    contiguous blocks, where l~ is the COMPRESSED length."""
+    bsyms = disk.block_bytes // disk.itemsize
+    for i in range(disk.num_lists):
+        lo, hi = disk.span(i)
+        ltilde = hi - lo
+        bound = 1 + int(np.ceil(max(ltilde - 1, 0) / bsyms))
+        assert disk.block_accesses(i) <= bound

@@ -1,0 +1,64 @@
+"""Unit tests for the roofline HLO-collective parser (the §Roofline
+measurement tool itself must be trustworthy)."""
+
+import pytest
+
+from repro.launch.hlo_analysis import (CollectiveStats, _shape_bytes,
+                                       parse_collectives)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32", "4,128") == 4 * 128 * 4
+    assert _shape_bytes("bf16", "2,3,5") == 30 * 2
+    assert _shape_bytes("pred", "64") == 64
+    assert _shape_bytes("f32", "") == 4  # scalar
+
+
+def test_parse_all_reduce_ring_formula():
+    hlo = ('%ar = f32[1024,1024]{1,0} all-reduce(f32[1024,1024] %p), '
+           'replica_groups={{0,1,2,3}}, to_apply=%add\n')
+    st = parse_collectives(hlo, num_devices=4)
+    want = 2.0 * (1024 * 1024 * 4) * 3 / 4
+    assert st.wire_bytes == pytest.approx(want)
+    assert st.op_counts["all-reduce"] == 1
+
+
+def test_parse_all_gather_and_reduce_scatter():
+    hlo = ('%ag = bf16[64,256]{1,0} all-gather(bf16[4,256] %p), '
+           'replica_groups=[1,16]<=[16], dimensions={0}\n'
+           '%rs = bf16[4,256]{1,0} reduce-scatter(bf16[64,256] %q), '
+           'replica_groups=[1,16]<=[16], dimensions={0}\n')
+    st = parse_collectives(hlo, num_devices=16)
+    ag = (64 * 256 * 2) * 15 / 16
+    rs = (4 * 256 * 2) * 15          # out_bytes * (k-1)
+    assert st.op_bytes["all-gather"] == pytest.approx(ag)
+    assert st.op_bytes["reduce-scatter"] == pytest.approx(rs)
+
+
+def test_parse_collective_permute_and_start_done():
+    hlo = ('%cp = f32[128]{0} collective-permute(f32[128] %p), '
+           'source_target_pairs={{0,1},{1,0}}\n'
+           '%s = f32[128]{0} all-reduce-start(f32[128] %p), '
+           'replica_groups={{0,1}}\n'
+           '%d = f32[128]{0} all-reduce-done(%s)\n')
+    st = parse_collectives(hlo, num_devices=2)
+    # permute counted at full bytes; start counted once, done skipped
+    assert st.op_counts["collective-permute"] == 1
+    assert st.op_counts["all-reduce"] == 1
+    assert st.op_bytes["collective-permute"] == pytest.approx(128 * 4)
+
+
+def test_parse_tuple_collective():
+    hlo = ('%t = (f32[64]{0}, bf16[32]{0}) all-gather(f32[4] %a, '
+           'bf16[2] %b), replica_groups={{0,1,2,3,4,5,6,7,'
+           '8,9,10,11,12,13,14,15}}, dimensions={0}\n')
+    st = parse_collectives(hlo, num_devices=16)
+    want = (64 * 4 + 32 * 2) * 15 / 16
+    assert st.op_bytes["all-gather"] == pytest.approx(want)
+
+
+def test_group_size_singleton_skipped():
+    hlo = ('%ar = f32[128]{0} all-reduce(f32[128] %p), '
+           'replica_groups={{0}}, to_apply=%add\n')
+    st = parse_collectives(hlo, num_devices=256)
+    assert st.wire_bytes == 0.0  # k=1: no wire traffic

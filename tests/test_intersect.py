@@ -1,0 +1,110 @@
+"""Intersection algorithms vs the set oracle (§3.3): every method must
+produce exactly np.intersect1d on every pair."""
+
+import numpy as np
+import pytest
+
+from repro.core import intersect as I
+from repro.core.repair import repair_compress
+from repro.core.sampling import build_a_sampling, build_b_sampling
+
+
+@pytest.fixture(scope="module")
+def setup(lists):
+    res = repair_compress(lists)
+    return (res, build_a_sampling(res, k=4), build_b_sampling(res, B=8))
+
+
+def _pairs(lists, rng, n=40):
+    out = []
+    for _ in range(n):
+        i, j = rng.choice(len(lists), 2, replace=False)
+        if len(lists[i]) > len(lists[j]):
+            i, j = j, i
+        out.append((int(i), int(j)))
+    return out
+
+
+def test_skip_no_sampling(lists, setup, rng):
+    res, _, _ = setup
+    for i, j in _pairs(lists, rng):
+        oracle = np.intersect1d(lists[i], lists[j])
+        np.testing.assert_array_equal(I.intersect_skip(res, i, j), oracle)
+
+
+@pytest.mark.parametrize("search", ["seq", "bin", "exp"])
+def test_svs_a_sampling(lists, setup, rng, search):
+    res, asamp, _ = setup
+    for i, j in _pairs(lists, rng, 25):
+        oracle = np.intersect1d(lists[i], lists[j])
+        np.testing.assert_array_equal(
+            I.intersect_svs(res, i, j, asamp, search), oracle)
+
+
+def test_lookup_b_sampling(lists, setup, rng):
+    res, _, bsamp = setup
+    for i, j in _pairs(lists, rng):
+        oracle = np.intersect1d(lists[i], lists[j])
+        np.testing.assert_array_equal(
+            I.intersect_lookup(res, i, j, bsamp), oracle)
+
+
+def test_merge(lists):
+    a, b = lists[0], lists[1]
+    np.testing.assert_array_equal(I.intersect_merge(a, b),
+                                  np.intersect1d(a, b))
+
+
+def test_multi_list(lists, setup, rng):
+    res, asamp, bsamp = setup
+    for _ in range(10):
+        k = int(rng.integers(2, 5))
+        idxs = list(rng.choice(len(lists), k, replace=False).astype(int))
+        oracle = lists[idxs[0]]
+        for i in idxs[1:]:
+            oracle = np.intersect1d(oracle, lists[i])
+        for samp in (None, asamp, bsamp):
+            got = I.intersect_multi(res, idxs, samp)
+            np.testing.assert_array_equal(got, oracle)
+
+
+def test_next_geq_semantics(lists, setup, rng):
+    res, _, _ = setup
+    for i in range(0, len(lists), 3):
+        cl = I.CompressedList(res, i)
+        cur = cl.cursor()
+        arr = lists[i]
+        for x in sorted(rng.integers(0, res.universe, size=30)):
+            got = cl.next_geq(int(x), cur)
+            pos = np.searchsorted(arr, x)
+            want = int(arr[pos]) if pos < len(arr) else None
+            assert got == want, f"list {i} x {x}"
+
+
+def test_cursor_resumability(lists, setup):
+    """The cursor never enters a phrase — re-querying larger x after a
+    descent must still be correct."""
+    res, _, _ = setup
+    i = max(range(len(lists)), key=lambda i: len(lists[i]))
+    cl = I.CompressedList(res, i)
+    cur = cl.cursor()
+    arr = lists[i]
+    for x in arr[::2]:
+        got = cl.next_geq(int(x), cur)
+        assert got == int(x)
+
+
+def test_svs_uncompressed_baselines(lists, rng):
+    for i, j in _pairs(lists, rng, 15):
+        oracle = np.intersect1d(lists[i], lists[j])
+        np.testing.assert_array_equal(
+            I.svs_uncompressed(lists[i], lists[j], "exp"), oracle)
+        np.testing.assert_array_equal(
+            I.baeza_yates(lists[i], lists[j]), oracle)
+
+
+def test_empty_intersection():
+    a = np.asarray([1, 3, 5])
+    b = np.asarray([2, 4, 6])
+    res = repair_compress([a, b])
+    assert I.intersect_skip(res, 0, 1).size == 0

@@ -1,0 +1,105 @@
+"""Device-resident flat index + batched query engine vs the numpy oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.jax_index import build_flat_index, INT_INF
+from repro.core.batched import (make_expand, make_member, make_next_geq,
+                                make_pair_intersect)
+from repro.core.repair import repair_compress
+from repro.serve.query_serve import QueryServer
+
+
+@pytest.fixture(scope="module")
+def flat(lists, repair_result):
+    return build_flat_index(repair_result)
+
+
+def test_next_geq_batch(lists, flat, rng):
+    nd = make_next_geq(flat)
+    L = len(lists)
+    lids = rng.integers(0, L, size=400).astype(np.int32)
+    xs = rng.integers(0, flat.universe, size=400).astype(np.int32)
+    got = np.asarray(nd(jnp.asarray(lids), jnp.asarray(xs)))
+    for li, x, g in zip(lids, xs, got):
+        arr = lists[li]
+        pos = np.searchsorted(arr, x)
+        want = arr[pos] if pos < len(arr) else int(INT_INF)
+        assert g == want, f"list {li} x {x}: got {g} want {want}"
+
+
+def test_member_batch(lists, flat, rng):
+    mb = make_member(flat)
+    L = len(lists)
+    # half real members, half random probes
+    lids, xs, want = [], [], []
+    for _ in range(200):
+        li = int(rng.integers(0, L))
+        if rng.random() < 0.5:
+            x = int(rng.choice(lists[li]))
+        else:
+            x = int(rng.integers(0, flat.universe))
+        lids.append(li)
+        xs.append(x)
+        want.append(bool(np.isin(x, lists[li])))
+    got = np.asarray(mb(jnp.asarray(lids, jnp.int32),
+                        jnp.asarray(xs, jnp.int32)))
+    np.testing.assert_array_equal(got, np.asarray(want))
+
+
+def test_expand_batch(lists, flat):
+    ml = max(len(l) for l in lists)
+    ex = make_expand(flat, ml)
+    dec = np.asarray(ex(jnp.arange(len(lists), dtype=jnp.int32)))
+    for i, pl in enumerate(lists):
+        got = dec[i][dec[i] != int(INT_INF)]
+        np.testing.assert_array_equal(got, pl)
+
+
+def test_pair_intersect_batch(lists, flat, rng):
+    ml = max(len(l) for l in lists)
+    pi = make_pair_intersect(flat, ml)
+    shorts, longs = [], []
+    for _ in range(30):
+        i, j = rng.choice(len(lists), 2, replace=False)
+        if len(lists[i]) > len(lists[j]):
+            i, j = j, i
+        shorts.append(int(i))
+        longs.append(int(j))
+    mat = np.asarray(pi(jnp.asarray(shorts, jnp.int32),
+                        jnp.asarray(longs, jnp.int32)))
+    for row, i, j in zip(mat, shorts, longs):
+        got = row[row != int(INT_INF)]
+        np.testing.assert_array_equal(got, np.intersect1d(lists[i], lists[j]))
+
+
+def test_query_server(lists, repair_result, rng):
+    qs = QueryServer(repair_result,
+                     max_short_len=max(len(l) for l in lists))
+    pairs = []
+    for _ in range(20):
+        i, j = rng.choice(len(lists), 2, replace=False)
+        pairs.append((int(i), int(j)))
+    outs = qs.and_batch(pairs)
+    for (i, j), got in zip(pairs, outs):
+        np.testing.assert_array_equal(got, np.intersect1d(lists[i], lists[j]))
+
+
+def test_query_server_host_fallback(lists, repair_result):
+    """Pairs whose 'short' list exceeds the device cap route to host."""
+    qs = QueryServer(repair_result, max_short_len=4)
+    big = sorted(range(len(lists)), key=lambda i: -len(lists[i]))[:2]
+    out = qs.and_batch([(big[0], big[1])])[0]
+    np.testing.assert_array_equal(
+        out, np.intersect1d(lists[big[0]], lists[big[1]]))
+
+
+def test_flat_index_tables(repair_result, flat):
+    g = repair_result.grammar
+    T = flat.num_terminals
+    # terminal sums are the gap values; rule sums match grammar
+    assert (np.asarray(flat.sym_left[:T]) == -1).all()
+    np.testing.assert_array_equal(np.asarray(flat.sym_sum[T:]),
+                                  g.sums.astype(np.int32))
+    assert flat.max_depth >= int(g.depths.max(initial=1))

@@ -1,0 +1,99 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import intersect as I
+from repro.core.dictionary import build_forest
+from repro.core.optimize import optimize_rules
+from repro.core.repair import repair_compress
+from repro.core.sampling import build_a_sampling, build_b_sampling
+
+
+@st.composite
+def posting_lists(draw, max_lists=8, max_universe=600, max_len=120):
+    n = draw(st.integers(2, max_lists))
+    u = draw(st.integers(16, max_universe))
+    out = []
+    for _ in range(n):
+        ln = draw(st.integers(1, min(max_len, u)))
+        ids = draw(st.sets(st.integers(0, u - 1), min_size=ln, max_size=ln))
+        out.append(np.asarray(sorted(ids), dtype=np.int64))
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(posting_lists())
+def test_roundtrip_property(lists):
+    res = repair_compress(lists)
+    for i, pl in enumerate(lists):
+        np.testing.assert_array_equal(res.decode_list(i), pl)
+
+
+@settings(max_examples=25, deadline=None)
+@given(posting_lists())
+def test_phrase_sum_invariant(lists):
+    """Invariant: for every rule, sum == sum(expansion), len == |expansion|,
+    and every list's symbols' sums telescope to last - first."""
+    res = repair_compress(lists)
+    g = res.grammar
+    for r in range(g.num_rules):
+        exp = g.expand_symbol(g.num_terminals + r)
+        assert g.sums[r] == sum(exp)
+        assert g.lengths[r] == len(exp)
+    from repro.core.sampling import _phrase_sums_for
+    for i, pl in enumerate(lists):
+        sums = _phrase_sums_for(res.list_symbols(i), g)
+        assert sums.sum() == pl[-1] - pl[0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(posting_lists(), st.integers(2, 16))
+def test_intersection_property(lists, k):
+    res = repair_compress(lists)
+    asamp = build_a_sampling(res, k)
+    bsamp = build_b_sampling(res, B=4)
+    i, j = 0, 1
+    if len(lists[i]) > len(lists[j]):
+        i, j = j, i
+    oracle = np.intersect1d(lists[i], lists[j])
+    np.testing.assert_array_equal(I.intersect_skip(res, i, j), oracle)
+    np.testing.assert_array_equal(
+        I.intersect_svs(res, i, j, asamp, "exp"), oracle)
+    np.testing.assert_array_equal(
+        I.intersect_lookup(res, i, j, bsamp), oracle)
+
+
+@settings(max_examples=20, deadline=None)
+@given(posting_lists())
+def test_forest_expansion_property(lists):
+    res = repair_compress(lists)
+    forest = build_forest(res.grammar)
+    g = res.grammar
+    for r in range(g.num_rules):
+        assert forest.expand_at(int(forest.pos_of_rule[r])) == \
+            g.expand_symbol(g.num_terminals + r)
+
+
+@settings(max_examples=20, deadline=None)
+@given(posting_lists())
+def test_optimize_property(lists):
+    """Optimization is size-monotone and content-preserving."""
+    res = repair_compress(lists)
+    res2, report = optimize_rules(res)
+    assert report.best_bits <= report.orig_bits
+    for i, pl in enumerate(lists):
+        np.testing.assert_array_equal(res2.decode_list(i), pl)
+
+
+@settings(max_examples=15, deadline=None)
+@given(posting_lists(max_lists=4, max_universe=300),
+       st.integers(0, 299))
+def test_next_geq_property(lists, x):
+    res = repair_compress(lists)
+    for i, pl in enumerate(lists):
+        cl = I.CompressedList(res, i)
+        got = cl.next_geq(x, cl.cursor())
+        pos = np.searchsorted(pl, x)
+        want = int(pl[pos]) if pos < len(pl) else None
+        assert got == want

@@ -1,0 +1,88 @@
+"""Assignment-contract checks: the registry exposes exactly the assigned
+(architecture × shape) grid with the published configs."""
+
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.launch.specs import all_cells
+
+
+def test_40_assigned_cells_plus_repair_ir():
+    cells = all_cells(include_repair_ir=False)
+    assert len(cells) == 40
+    assert len(all_cells(include_repair_ir=True)) == 43
+
+
+def test_lm_configs_match_assignment():
+    c = get_arch("qwen3-32b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (64, 5120, 64, 8, 25600, 151936)
+    assert c.qk_norm
+    c = get_arch("yi-6b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (32, 4096, 32, 4, 11008, 64000)
+    c = get_arch("minicpm3-4b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (62, 2560, 40, 6400, 73448)
+    assert c.attn == "mla"
+    c = get_arch("granite-moe-3b-a800m").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab,
+            c.n_experts, c.top_k) == (32, 1536, 24, 8, 512, 49155, 40, 8)
+    c = get_arch("phi3.5-moe-42b-a6.6b").config
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab,
+            c.n_experts, c.top_k) == (32, 4096, 32, 8, 6400, 32064, 16, 2)
+
+
+def test_lm_shapes_match_assignment():
+    arch = get_arch("qwen3-32b")
+    s = arch.shape("train_4k")
+    assert (s.params["seq"], s.params["batch"]) == (4096, 256)
+    s = arch.shape("prefill_32k")
+    assert (s.params["seq"], s.params["batch"]) == (32768, 32)
+    s = arch.shape("decode_32k")
+    assert (s.params["seq"], s.params["batch"]) == (32768, 128)
+    s = arch.shape("long_500k")
+    assert (s.params["seq"], s.params["batch"]) == (524288, 1)
+    assert s.params["window"] > 0  # sub-quadratic mode
+
+
+def test_gnn_shapes_match_assignment():
+    arch = get_arch("gcn-cora")
+    assert (arch.config.n_layers, arch.config.d_hidden) == (2, 16)
+    s = arch.shape("full_graph_sm")
+    assert (s.params["n_nodes"], s.params["n_edges"]) == (2708, 10556)
+    s = arch.shape("minibatch_lg")
+    assert s.params["n_edges"] == 114_615_892
+    assert tuple(s.params["fanouts"]) == (15, 10)
+    s = arch.shape("ogb_products")
+    assert (s.params["n_nodes"], s.params["n_edges"]) == \
+        (2_449_029, 61_859_140)
+    s = arch.shape("molecule")
+    assert (s.params["n_nodes"], s.params["n_edges"], s.params["batch"]) \
+        == (30, 64, 128)
+
+
+def test_recsys_configs_and_shapes():
+    c = get_arch("bert4rec").config
+    assert (c.embed_dim, c.n_blocks, c.n_heads, c.seq_len) == (64, 2, 2, 200)
+    assert not c.causal
+    c = get_arch("sasrec").config
+    assert (c.embed_dim, c.n_blocks, c.n_heads, c.seq_len) == (50, 2, 1, 50)
+    assert c.causal
+    c = get_arch("bst").config
+    assert (c.embed_dim, c.seq_len, c.n_blocks, c.n_heads) == (32, 20, 1, 8)
+    assert c.mlp_dims == (1024, 512, 256)
+    c = get_arch("deepfm").config
+    assert (c.n_fields, c.embed_dim) == (39, 10)
+    assert c.mlp_dims == (400, 400, 400)
+    arch = get_arch("deepfm")
+    assert arch.shape("train_batch").params["batch"] == 65_536
+    assert arch.shape("serve_bulk").params["batch"] == 262_144
+    assert arch.shape("retrieval_cand").params["n_candidates"] == 1_000_000
+
+
+def test_every_arch_has_smoke_config():
+    for name in list_archs():
+        arch = get_arch(name)
+        assert arch.smoke_config is not None
+        assert arch.source

@@ -1,0 +1,78 @@
+"""(a)- and (b)-sampling invariants (§3.2)."""
+
+import numpy as np
+
+from repro.core.repair import repair_compress
+from repro.core.sampling import (build_a_sampling, build_b_sampling,
+                                 choose_bucket_bits, _phrase_sums_for)
+
+
+def test_a_sampling_values(lists, repair_result):
+    res = repair_result
+    samp = build_a_sampling(res, k=4)
+    for i in range(res.num_lists):
+        syms = res.list_symbols(i)
+        sums = _phrase_sums_for(syms, res.grammar)
+        csum = np.concatenate([[0], np.cumsum(sums)]) + int(res.first_values[i])
+        for j, v in enumerate(samp.values[i]):
+            assert v == csum[j * 4]
+        # first sample is the list head
+        assert samp.values[i][0] == lists[i][0]
+
+
+def test_b_sampling_anchor_invariant(lists, repair_result):
+    """For bucket b: scanning from (c_pos, abs_before) must reach the first
+    element >= b*2^k without passing it."""
+    res = repair_result
+    samp = build_b_sampling(res, B=8)
+    for i in range(res.num_lists):
+        k = samp.kbits[i]
+        arr = lists[i]
+        syms = res.list_symbols(i)
+        sums = _phrase_sums_for(syms, res.grammar)
+        cum = np.concatenate([[int(res.first_values[i])],
+                              int(res.first_values[i]) + np.cumsum(sums)])
+        for b in range(samp.c_pos[i].size):
+            bound = b << k
+            jb = int(samp.c_pos[i][b])
+            ab = int(samp.abs_before[i][b])
+            pos = np.searchsorted(arr, bound)
+            if pos >= len(arr):
+                continue  # past the end: anchor may point anywhere ahead
+            first_geq = arr[pos]
+            # anchor value never exceeds the first element >= bound
+            # (except the head special case handled at query time)
+            if bound > arr[0]:
+                assert ab <= first_geq
+                # anchor is consistent with the cumulative sums
+                assert ab == cum[jb]
+
+
+def test_choose_bucket_bits():
+    # l/B buckets: k = ceil(log2(u*B/l))
+    assert choose_bucket_bits(1024, 128, B=8) == 6  # 1024*8/128 = 64 -> 2^6
+    assert choose_bucket_bits(1 << 20, 1, B=8) >= 20
+
+
+def test_b_sampling_multiple_anchors_same_phrase():
+    """Paper: 'several consecutive sampled entries may point to the same
+    position in C' — construct a list with one giant phrase."""
+    base = np.arange(0, 512, 2)  # gaps all 2 -> compresses to few symbols
+    res = repair_compress([base, base.copy()])
+    samp = build_b_sampling(res, B=2)
+    cp = samp.c_pos[0]
+    # with heavy compression some adjacent buckets share a phrase anchor
+    assert (np.diff(cp) == 0).any() or res.compressed_length(0) > len(base) // 4
+
+
+def test_sampling_size_accounting(lists, repair_result):
+    res = repair_result
+    a = build_a_sampling(res, k=4)
+    b = build_b_sampling(res, B=8)
+    assert a.size_bits(res.universe) > 0
+    comp_lens = np.asarray([res.compressed_length(i)
+                            for i in range(res.num_lists)])
+    assert b.size_bits(res.universe, comp_lens) > 0
+    # denser a-sampling costs more
+    a2 = build_a_sampling(res, k=2)
+    assert a2.size_bits(res.universe) > a.size_bits(res.universe)
