@@ -3,19 +3,30 @@
 
 Reproduces the paper's NEGATIVE result for Re-Pair: converting the long
 lists to bitmaps helps byte codes more than Re-Pair (Re-Pair loses exactly
-the highly repetitive gaps that fed its compression)."""
+the highly repetitive gaps that fed its compression).
+
+``--engine host,jnp,pallas`` additionally times the same query pairs
+through the backend-pluggable ``repro.engine`` tier (pure Re-Pair, no
+bitmaps) so the hybrid's win is measured against every backend.
+
+  PYTHONPATH=src python -m benchmarks.bench_bitmap_hybrid --engine jnp
+"""
 
 from __future__ import annotations
 
+import argparse
+import time
+
 import numpy as np
 
+from repro.engine import DeviceEngine, make_engine, validate_engines
 from repro.index.builder import build_index
 from repro.index.query import QueryEngine
 
 from .common import corpus_lists, emit, time_us
 
 
-def run() -> dict:
+def run(engines: tuple[str, ...] = ("jnp",)) -> dict:
     lists, u = corpus_lists()
     n_post = sum(len(l) for l in lists)
 
@@ -55,15 +66,29 @@ def run() -> dict:
                                     number=3) for p in pairs]))
     t_hyb = float(np.mean([time_us(qh.conjunctive, list(p), repeat=1,
                                    number=3) for p in pairs]))
-    emit([{"pure_us": t_pure, "hybrid_us": t_hyb}],
-         "fig3-right: hybrid query time (us/query)")
+    timing = {"pure_us": t_pure, "hybrid_us": t_hyb}
+
+    # engine axis: the same pairs, batched through each repro.engine backend
+    # over the PURE index (hyb.repair holds 2-element stubs for the lists
+    # that were routed to bitmaps — timing those would be meaningless)
+    for name in engines:
+        eng = make_engine(name, pure.repair)
+        if isinstance(eng, DeviceEngine):   # warmup: jit compile at the
+            eng.intersect_pairs(pairs)      # timed batch shape
+
+        t0 = time.perf_counter()
+        eng.intersect_pairs(pairs)
+        timing[f"engine_{name}_us"] = (
+            1e6 * (time.perf_counter() - t0) / len(pairs))
+    emit([timing], "fig3-right: hybrid query time (us/query) + engine axis")
 
     gains = {r["method"]: r["hybrid_gain_pct"] for r in rows}
     return gains
 
 
-def main() -> None:
-    gains = run()
+def main(engines: tuple[str, ...] = ("jnp",)) -> None:
+    validate_engines(engines)  # before the (slow) index builds run
+    gains = run(engines=engines)
     # the paper's negative result: byte codes gain more from bitmaps than
     # Re-Pair does (when the split triggers at this scale)
     if gains and "repair" in gains and "vbyte" in gains:
@@ -73,4 +98,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", type=str, default="jnp",
+                    help="comma-separated backends: host,jnp,pallas")
+    main(engines=tuple(ap.parse_args().engine.split(",")))

@@ -1,8 +1,18 @@
 """Paper Fig. 3 (left): intersection time as a function of the length
 ratio n/m, for every method: merge / skip / svs(exp) / lookup over
-Re-Pair, vs byte-code exp and merge baselines."""
+Re-Pair, vs byte-code exp and merge baselines — plus the backend-pluggable
+engine axis (``--engine host,jnp,pallas``): the same query stream timed
+through each ``repro.engine`` backend, batched, so the host cursor tier,
+the jnp device tier, and the fused Pallas kernel are directly comparable.
+
+  PYTHONPATH=src python -m benchmarks.run --only fig3
+  PYTHONPATH=src python -m benchmarks.bench_intersection --engine host,jnp
+"""
 
 from __future__ import annotations
+
+import argparse
+import time
 
 import numpy as np
 
@@ -10,20 +20,15 @@ from repro.core import codecs as CD
 from repro.core import intersect as I
 from repro.core.repair import repair_compress
 from repro.core.sampling import build_a_sampling, build_b_sampling
+from repro.engine import DeviceEngine, make_engine, validate_engines
 
 from .common import corpus_lists, emit, time_us
 
+DEFAULT_ENGINES = ("host", "jnp")
 
-def run(n_pairs=60) -> list[dict]:
-    lists, u = corpus_lists()
-    res = repair_compress(lists)
-    asamp = build_a_sampling(res, k=8)
-    bsamp = build_b_sampling(res, B=8)
-    enc = CD.encode_lists(lists, "vbyte", k=8, universe=u)
 
-    rng = np.random.default_rng(0)
+def _ratio_buckets(lists, rng, n_pairs):
     lens = np.asarray([len(l) for l in lists])
-    # bucket pairs by ratio
     buckets = {1: [], 10: [], 100: []}
     tries = 0
     while tries < 20000 and any(len(v) < n_pairs for v in buckets.values()):
@@ -38,6 +43,47 @@ def run(n_pairs=60) -> list[dict]:
             if b <= ratio < b * 10 and len(buckets[b]) < n_pairs:
                 buckets[b].append((int(i), int(j)))
                 break
+    return buckets
+
+
+def bench_engines(res, buckets, engines=DEFAULT_ENGINES) -> list[dict]:
+    """Per-engine batched throughput on the same pair stream: one
+    ``intersect_pairs`` call per (engine, ratio-bucket), timed after a
+    warmup call (device engines jit-compile on first use)."""
+    rows = []
+    for name in engines:
+        # no interpret override: PallasEngine auto-selects (compiled on
+        # TPU, interpreter elsewhere), so the axis measures the real tier
+        eng = make_engine(name, res)
+        for b, pairs in buckets.items():
+            if not pairs:
+                continue
+            if isinstance(eng, DeviceEngine):  # warmup: jit compile at the
+                eng.intersect_pairs(pairs)     # timed batch shape
+
+            t0 = time.perf_counter()
+            outs = eng.intersect_pairs(pairs)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "engine": name,
+                "ratio_bucket": f"{b}-{b*10}",
+                "n_pairs": len(pairs),
+                "us_per_query": 1e6 * dt / len(pairs),
+                "queries_per_s": len(pairs) / dt,
+                "result_docs": int(sum(len(o) for o in outs)),
+            })
+    return rows
+
+
+def run(n_pairs=60, engines=DEFAULT_ENGINES) -> tuple[list[dict], list[dict]]:
+    lists, u = corpus_lists()
+    res = repair_compress(lists)
+    asamp = build_a_sampling(res, k=8)
+    bsamp = build_b_sampling(res, B=8)
+    enc = CD.encode_lists(lists, "vbyte", k=8, universe=u)
+
+    rng = np.random.default_rng(0)
+    buckets = _ratio_buckets(lists, rng, n_pairs)
 
     def ops_count(make_acc, pairs):
         """Machine-independent cost (§4): symbol touches per query."""
@@ -75,11 +121,16 @@ def run(n_pairs=60) -> list[dict]:
         })
     emit(rows, "fig3-left: intersection time by n/m ratio "
                "(us/query wall, ops = symbol touches)")
-    return rows
+
+    engine_rows = bench_engines(res, buckets, engines)
+    emit(engine_rows, "engine axis: batched intersect_pairs throughput "
+                      "per backend (us/query)")
+    return rows, engine_rows
 
 
-def main() -> None:
-    rows = run()
+def main(engines=DEFAULT_ENGINES) -> dict:
+    validate_engines(engines)  # before the (slow) host-method sweep
+    rows, engine_rows = run(engines=engines)
     # The paper's algorithmic claim, in the machine-independent measure:
     # sampling cuts the symbols touched vs the unsampled skip scan.
     # (Wall-clock merge here is numpy's C loop vs our Python svs loops —
@@ -89,7 +140,22 @@ def main() -> None:
     if hi:
         assert hi[0]["svs_ops"] < hi[0]["skip_ops"]
         assert hi[0]["lookup_ops"] < hi[0]["skip_ops"]
+    # machine-readable per-engine throughput (benchmarks/run.py writes this
+    # to BENCH_intersection.json)
+    return {
+        "host_methods": rows,
+        "engines": engine_rows,
+        "throughput_qps": {
+            name: float(np.mean([r["queries_per_s"] for r in engine_rows
+                                 if r["engine"] == name]))
+            for name in {r["engine"] for r in engine_rows}
+        },
+    }
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", type=str, default=",".join(DEFAULT_ENGINES),
+                    help="comma-separated backends: host,jnp,pallas")
+    args = ap.parse_args()
+    main(engines=tuple(args.engine.split(",")))

@@ -2,11 +2,18 @@
 
   python -m benchmarks.run            # all benches
   python -m benchmarks.run --only fig2,heights
+
+A bench whose ``main()`` returns a JSON-serializable dict gets it written
+to ``BENCH_<module-suffix>.json`` (e.g. ``benchmarks.bench_intersection``
+-> ``BENCH_intersection.json`` with per-engine throughput) so the perf
+trajectory is machine-readable across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
@@ -22,9 +29,16 @@ BENCHES = {
 }
 
 
+def _json_path(mod_name: str, out_dir: str) -> str:
+    suffix = mod_name.rsplit(".", 1)[-1].removeprefix("bench_")
+    return os.path.join(out_dir, f"BENCH_{suffix}.json")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--json-dir", type=str, default=".",
+                    help="where BENCH_*.json reports are written")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(BENCHES))
     failures = 0
@@ -34,7 +48,12 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             mod = __import__(mod_name, fromlist=["main"])
-            mod.main()
+            payload = mod.main()
+            if isinstance(payload, dict):
+                path = _json_path(mod_name, args.json_dir)
+                with open(path, "w") as f:
+                    json.dump(payload, f, indent=2, sort_keys=True)
+                print(f"[{name}] wrote {path}")
             print(f"[{name}] ok in {time.perf_counter()-t0:.1f}s")
         except Exception:
             failures += 1

@@ -1,10 +1,12 @@
 """Batched conjunctive-query serving on the device-resident Re-Pair index
 — the TPU-native production tier (DESIGN.md §2): thousands of queries per
-jit call over the flattened grammar + C arrays.
+jit call over the flattened grammar + C arrays, routed through the
+backend-pluggable engine API (DESIGN.md §2.4).
 
-  PYTHONPATH=src python examples/serve_queries.py
+  PYTHONPATH=src python examples/serve_queries.py [--engine host|jnp|pallas]
 """
 
+import argparse
 import time
 
 import numpy as np
@@ -15,21 +17,27 @@ from repro.serve.query_serve import QueryServer
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("host", "jnp", "pallas"),
+                    default="jnp")
+    args = ap.parse_args()
+
     corpus = zipf_corpus(num_docs=1500, vocab_size=3000, mean_doc_len=100,
                          seed=1)
     lists = corpus.postings()
     print(f"collection: {corpus.num_docs} docs, {len(lists)} terms")
 
     res = repair_compress(lists)
-    srv = QueryServer(res, max_short_len=256)
-    print(f"device index: C={int(res.seq.size)} symbols, "
-          f"{res.grammar.num_rules} rules, max_depth={srv.fi.max_depth}, "
-          f"max_scan={srv.fi.max_scan}")
+    srv = QueryServer(res, max_short_len=256, engine=args.engine)
+    stats = (f", max_depth={srv.fi.max_depth}, max_scan={srv.fi.max_scan}"
+             if srv._fi is not None else "")  # don't force a host-tier build
+    print(f"index: C={int(res.seq.size)} symbols, "
+          f"{res.grammar.num_rules} rules{stats}, engine={srv.engine.name}")
 
     rng = np.random.default_rng(0)
 
     # batched membership probes
-    B = 8192
+    B = 8192 if args.engine != "host" else 2048
     lids = rng.integers(0, len(lists), B)
     xs = rng.integers(0, corpus.num_docs, B)
     srv.member_batch(lids[:16], xs[:16])  # compile
@@ -37,7 +45,7 @@ def main() -> None:
     hits = srv.member_batch(lids, xs)
     dt = time.perf_counter() - t0
     print(f"\nmembership: {B} probes in {dt*1e3:.1f} ms "
-          f"({B/dt/1e6:.2f} M probes/s on CPU backend), "
+          f"({B/dt/1e6:.2f} M probes/s on {srv.engine.name}), "
           f"{int(hits.sum())} hits")
     # verify a sample against the raw lists
     for k in range(0, B, 512):
@@ -57,6 +65,22 @@ def main() -> None:
     for (a, b), got in list(zip(pairs, outs))[::32]:
         np.testing.assert_array_equal(got, np.intersect1d(lists[a], lists[b]))
     print("all spot-checked results match the set oracle")
+
+    # k-term conjunctive queries (device-side pairwise svs, §3.3 order)
+    queries = [list(map(int, rng.choice(len(lists), int(k), replace=False)))
+               for k in rng.integers(3, 6, size=32)]
+    srv.and_multi(queries[:2])  # compile
+    t0 = time.perf_counter()
+    mouts = srv.and_multi(queries)
+    dt = time.perf_counter() - t0
+    print(f"k-term AND: {len(queries)} queries (k=3..5) in {dt*1e3:.1f} ms "
+          f"({len(queries)/dt:.0f} q/s)")
+    for q, got in list(zip(queries, mouts))[::8]:
+        oracle = lists[q[0]]
+        for t in q[1:]:
+            oracle = np.intersect1d(oracle, lists[t])
+        np.testing.assert_array_equal(got, oracle)
+    print("k-term spot-checks match the set oracle")
     print("\nserve_queries OK")
 
 

@@ -1,6 +1,8 @@
 """Core of the reproduction: Re-Pair compression of inverted lists with
 skipping, sampling, and intersection — plus the TPU-facing flattened index
-(``jax_index``) and batched query engine (``batched``)."""
+(``jax_index``, a registered pytree).  The batched query programs live in
+``repro.engine`` (``core.batched`` is a deprecated shim over its jnp
+backend)."""
 
 from .repair import Grammar, RePairResult, repair_compress, lists_to_gap_stream
 from .dictionary import DictForest, build_forest, map_c_symbols

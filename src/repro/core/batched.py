@@ -1,208 +1,34 @@
-"""Batched device query engine over the flattened Re-Pair index.
+"""Back-compat closure factories over the engine's jnp backend.
 
-All functions are pure-jnp, jit-able, and fixed-trip-count (no
-data-dependent shapes): the scan bound and descent depth are static
-properties of the index (``max_scan``, ``max_depth``).  This is the
-reference implementation the Pallas kernels are checked against, and the
-engine the serving example uses.
-
-Semantics mirror core/intersect.py::LookupList.next_geq:
-  * bucket lookup gives a start state (symbol offset j, absolute value s),
-  * phrase-sum skipping advances while s + sum < x,
-  * a fixed-depth descent resolves the answer inside the phrase.
+DEPRECATED SEAM: the batched device programs moved to
+``repro.engine.jnp_backend`` — module-level jitted functions that take the
+(pytree-registered) :class:`FlatIndex` as a traced argument, so jit caches
+survive index rebuilds.  These factories remain for callers written against
+the old closure-capture style; new code should use ``repro.engine``
+(``make_engine("jnp", res)``) or call ``jnp_backend`` directly.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-
-from .jax_index import FlatIndex, INT_INF
-
-
-def _next_geq_single(fi_arrays, static, list_id, x):
-    """Smallest element >= x in list ``list_id``; INT_INF if none.
-    fi_arrays: tuple of jnp arrays; static: (max_scan, max_depth, T)."""
-    (sym_left, sym_right, sym_sum, c, starts, firsts, lasts,
-     kbits, bucket_offsets, bck_c_pos, bck_abs) = fi_arrays
-    max_scan, max_depth, T = static
-
-    start = starts[list_id]
-    end = starts[list_id + 1]
-    first = firsts[list_id]
-    last = lasts[list_id]
-
-    # bucket lookup — direct addressing, the [ST07] "lookup" strategy
-    b = jax.lax.shift_right_logical(x, kbits[list_id])
-    boff = bucket_offsets[list_id]
-    bnum = bucket_offsets[list_id + 1] - boff
-    b = jnp.minimum(b, bnum - 1)
-    j = bck_c_pos[boff + b]
-    s = bck_abs[boff + b]
-    # if x <= first, the head answers
-    j = jnp.where(x <= first, 0, j)
-    s = jnp.where(x <= first, first, s)
-
-    # phrase-sum skipping: fixed trip count, masked updates
-    def scan_body(_, js):
-        j, s = js
-        in_range = start + j < end
-        sym = jnp.where(in_range, c[jnp.minimum(start + j, c.shape[0] - 1)], 0)
-        ps = jnp.where(in_range, sym_sum[sym], 0)
-        take = in_range & (s + ps < x)
-        return (j + jnp.where(take, 1, 0), s + jnp.where(take, ps, 0))
-
-    j, s = jax.lax.fori_loop(0, max_scan, scan_body, (j, s))
-
-    # if s >= x the previous element already answers (possible when the
-    # bucket anchor lands exactly on an element >= x)
-    done_early = s >= x
-    past_end = start + j >= end
-
-    # descent: choose left while s+sum(left) >= x else consume left
-    sym0 = c[jnp.minimum(start + j, c.shape[0] - 1)]
-
-    def descend_body(_, state):
-        sym, s = state
-        is_rule = sym >= T
-        l = jnp.where(is_rule, sym_left[sym], sym)
-        r = jnp.where(is_rule, sym_right[sym], sym)
-        ls = sym_sum[l]
-        go_left = s + ls >= x
-        new_sym = jnp.where(go_left, l, r)
-        new_s = jnp.where(go_left, s, s + ls)
-        return (jnp.where(is_rule, new_sym, sym),
-                jnp.where(is_rule, new_s, s))
-
-    sym_f, s_f = jax.lax.fori_loop(0, max_depth, descend_body, (sym0, s))
-    answer = s_f + sym_sum[sym_f]  # terminal closes the element
-
-    out = jnp.where(done_early, s, answer)
-    out = jnp.where(past_end & ~done_early, INT_INF, out)
-    out = jnp.where(x > last, INT_INF, out)
-    return out.astype(jnp.int32)
-
-
-def _fi_tuple(fi: FlatIndex):
-    return (fi.sym_left, fi.sym_right, fi.sym_sum, fi.c, fi.starts,
-            fi.firsts, fi.lasts, fi.kbits, fi.bucket_offsets,
-            fi.bck_c_pos, fi.bck_abs)
+from ..engine import jnp_backend as _J
+from .jax_index import FlatIndex, INT_INF  # noqa: F401  (re-export)
 
 
 def make_next_geq(fi: FlatIndex):
-    """Returns jitted batched next_geq(list_ids, xs) -> values."""
-    static = (fi.max_scan, fi.max_depth, fi.num_terminals)
-    arrays = _fi_tuple(fi)
-
-    @jax.jit
-    def batched(list_ids: jax.Array, xs: jax.Array) -> jax.Array:
-        f = partial(_next_geq_single, arrays, static)
-        return jax.vmap(f)(list_ids, xs)
-
-    return batched
+    """Returns batched next_geq(list_ids, xs) -> values."""
+    return lambda list_ids, xs: _J.next_geq_batch(fi, list_ids, xs)
 
 
 def make_member(fi: FlatIndex):
-    nd = make_next_geq(fi)
-
-    @jax.jit
-    def member(list_ids: jax.Array, xs: jax.Array) -> jax.Array:
-        return nd(list_ids, xs) == xs
-
-    return member
+    return lambda list_ids, xs: _J.member_batch(fi, list_ids, xs)
 
 
 def make_expand(fi: FlatIndex, max_list_len: int):
-    """Batched full-list expansion: decode list -> (max_list_len,) absolute
-    ids padded with INT_INF.  Uses pointer-free positional descent: output
-    slot t finds the t-th element by walking the grammar with per-node
-    length counters (sym_len) — O(max_depth) per element, fully parallel.
-    """
-    static = (fi.max_depth, fi.num_terminals)
-    arrays = (fi.sym_left, fi.sym_right, fi.sym_sum, fi.sym_len, fi.c,
-              fi.starts, fi.firsts, fi.lengths)
-
-    @jax.jit
-    def expand(list_ids: jax.Array) -> jax.Array:
-        sym_left, sym_right, sym_sum, sym_len, c, starts, firsts, lengths = arrays
-        max_depth, T = static
-
-        def one(list_id):
-            start = starts[list_id]
-            end = starts[list_id + 1]
-            n = end - start
-            first = firsts[list_id]
-            length = lengths[list_id]
-
-            # per-symbol expanded lengths and their prefix sums over a
-            # fixed window of the span (padded with zeros)
-            win = max_list_len  # symbols <= elements
-            idx = start + jnp.arange(win, dtype=jnp.int32)
-            valid = idx < end
-            syms = jnp.where(valid, c[jnp.minimum(idx, c.shape[0] - 1)], 0)
-            lens = jnp.where(valid, sym_len[syms], 0)
-            sums = jnp.where(valid, sym_sum[syms], 0)
-            cum_len = jnp.cumsum(lens)           # elements after symbol i
-            cum_sum = jnp.cumsum(sums) + first   # abs value after symbol i
-
-            # element t (1-based among gap-elements) lives in the symbol
-            # whose cum_len first reaches t
-            t = jnp.arange(1, max_list_len + 1, dtype=jnp.int32)
-            k = jnp.searchsorted(cum_len, t, side="left").astype(jnp.int32)
-            k = jnp.minimum(k, win - 1)
-            base_s = jnp.where(k > 0, cum_sum[jnp.maximum(k - 1, 0)], first)
-            base_t = jnp.where(k > 0, cum_len[jnp.maximum(k - 1, 0)], 0)
-            sym0 = syms[k]
-            # positional descent: want the (t - base_t)-th element of sym0
-            want = t - base_t  # 1-based within the phrase
-
-            def body(_, state):
-                sym, s, w = state
-                is_rule = sym >= T
-                l = jnp.where(is_rule, sym_left[sym], sym)
-                r = jnp.where(is_rule, sym_right[sym], sym)
-                ll = sym_len[l]
-                go_left = w <= ll
-                nsym = jnp.where(go_left, l, r)
-                ns = jnp.where(go_left, s, s + sym_sum[l])
-                nw = jnp.where(go_left, w, w - ll)
-                return (jnp.where(is_rule, nsym, sym),
-                        jnp.where(is_rule, ns, s),
-                        jnp.where(is_rule, nw, w))
-
-            symf, sf, _ = jax.lax.fori_loop(
-                0, max_depth, body, (sym0, base_s, want))
-            vals = sf + sym_sum[symf]
-            # element 0 is the head; shift: output[0]=first, output[i]=vals[i-1]
-            out = jnp.concatenate([first[None], vals[: max_list_len - 1]])
-            pos = jnp.arange(max_list_len, dtype=jnp.int32)
-            return jnp.where(pos < length, out, INT_INF).astype(jnp.int32)
-
-        return jax.vmap(one)(list_ids)
-
-    return expand
+    """Batched full-list expansion -> (B, max_list_len) INT_INF-padded."""
+    return lambda list_ids: _J.expand_batch(fi, list_ids, max_list_len)
 
 
 def make_pair_intersect(fi: FlatIndex, max_short_len: int):
-    """Batched pairwise svs: for B (short_id, long_id) pairs, expand the
-    short list (padded) and probe the long one.  Returns (B, max_short_len)
-    int32 with INT_INF at non-members/padding — callers compact on host or
-    count via (res != INT_INF).sum(-1)."""
-    expand = make_expand(fi, max_short_len)
-    static = (fi.max_scan, fi.max_depth, fi.num_terminals)
-    arrays = _fi_tuple(fi)
-
-    @jax.jit
-    def pair_intersect(short_ids: jax.Array, long_ids: jax.Array) -> jax.Array:
-        shorts = expand(short_ids)                 # (B, M)
-        f = partial(_next_geq_single, arrays, static)
-
-        def one(long_id, xs):
-            vals = jax.vmap(lambda x: f(long_id, x))(xs)
-            return jnp.where((vals == xs) & (xs != INT_INF), xs, INT_INF)
-
-        return jax.vmap(one)(long_ids, shorts)
-
-    return pair_intersect
+    """Batched pairwise svs -> (B, max_short_len) INT_INF-padded matches."""
+    return lambda short_ids, long_ids: _J.pair_intersect(
+        fi, short_ids, long_ids, max_short_len)

@@ -16,6 +16,13 @@ int32 arrays that support *vectorized* versions of the paper's operations:
 Symbols are re-encoded densely: ids ``0..T-1`` are the distinct terminal gap
 values that actually occur (value table ``term_value``), ids ``T..T+R-1`` are
 rules.  This keeps tables small even when some gaps are huge.
+
+``FlatIndex`` is a **registered JAX pytree** (DESIGN.md §2.3): the arrays are
+pytree leaves, the static bounds (``num_terminals``, ``max_depth``,
+``max_scan``, ``universe``) are hashable aux data.  Engines therefore take
+the index as a *traced argument* instead of closure-capturing its arrays —
+one jit cache entry serves every index rebuild that preserves the static
+bounds, and ``jax.tree.flatten`` / ``unflatten`` round-trip it losslessly.
 """
 
 from __future__ import annotations
@@ -33,18 +40,22 @@ from .sampling import BSampling, build_b_sampling, _phrase_sums_for
 INT_INF = np.int32(2**31 - 1)
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class FlatIndex:
     """All arrays are jnp int32 unless noted.  L lists, S symbols (dense
-    re-encoding), R rules, total C length N."""
+    re-encoding), R rules, total C length N.
+
+    Pytree: array fields are leaves; the four ints are static aux data, so
+    jit functions taking a ``FlatIndex`` retrace only when a *bound*
+    changes, never when array contents change (DESIGN.md §2.3).
+    """
 
     # grammar tables (size S = num_dense_terminals + R)
     sym_left: jax.Array     # child symbol id, -1 for terminals
     sym_right: jax.Array
     sym_sum: jax.Array      # phrase sum (terminal -> its gap value)
     sym_len: jax.Array      # expanded length (terminal -> 1)
-    num_terminals: int      # dense terminal count T
-    max_depth: int          # static descent bound
 
     # compressed stream
     c: jax.Array            # (N,) dense symbol ids
@@ -58,89 +69,105 @@ class FlatIndex:
     bucket_offsets: jax.Array  # (L+1,) into the two arrays below
     bck_c_pos: jax.Array    # per-bucket symbol offset within the list span
     bck_abs: jax.Array      # per-bucket absolute value before that symbol
-    max_scan: int           # static scan bound (symbols per bucket)
 
-    universe: int
+    # static bounds — aux data, not leaves
+    num_terminals: int = dataclasses.field(metadata=dict(static=True))
+    max_depth: int = dataclasses.field(metadata=dict(static=True))
+    max_scan: int = dataclasses.field(metadata=dict(static=True))
+    universe: int = dataclasses.field(metadata=dict(static=True))
 
-    def tree_flatten(self):
-        pass  # (not a pytree: static ints inside; pass arrays explicitly)
+
+def _dense_remap(syms: np.ndarray, term_values: np.ndarray,
+                 nt: int) -> np.ndarray:
+    """Old symbol ids -> dense ids: terminals map through ``term_values``
+    (searchsorted — exact because every used terminal is in the table),
+    rules shift down to ``T + rule_index``."""
+    syms = np.asarray(syms, dtype=np.int64)
+    T = term_values.size
+    is_rule = syms >= nt
+    out = np.empty(syms.shape, dtype=np.int32)
+    out[~is_rule] = np.searchsorted(term_values, syms[~is_rule])
+    out[is_rule] = (T + (syms[is_rule] - nt)).astype(np.int32)
+    return out
 
 
 def build_flat_index(res: RePairResult, B: int = 8,
                      bsamp: BSampling | None = None) -> FlatIndex:
+    """Flatten a :class:`RePairResult` (+ its (b)-sampling) to device arrays.
+
+    Fully vectorized: no per-rule or per-symbol Python loops — the grammar
+    tables, dense re-encoding, bucket flattening, scan bound, and per-list
+    lasts are all numpy index arithmetic, so index build is O(N + R + #buckets)
+    in C, not O(R) interpreted.
+    """
     g = res.grammar
     nt = g.num_terminals
     R = g.num_rules
+    L = res.num_lists
 
-    # Dense terminal re-encoding: find the distinct terminal values used in
-    # C or as rule children.
-    used_terms = set()
-    for s in np.unique(res.seq):
-        if s < nt:
-            used_terms.add(int(s))
-    for c in np.unique(g.rules.reshape(-1)) if R else []:
-        if c < nt:
-            used_terms.add(int(c))
-    term_values = np.asarray(sorted(used_terms), dtype=np.int64)
+    # Dense terminal re-encoding: distinct terminal values used in C or as
+    # rule children.
+    pools = [np.unique(res.seq)]
+    if R:
+        pools.append(np.unique(g.rules.reshape(-1)))
+    used = np.unique(np.concatenate(pools))
+    term_values = used[used < nt].astype(np.int64)
     T = term_values.size
-    # map old symbol -> dense id
-    remap = {}
-    for i, v in enumerate(term_values):
-        remap[int(v)] = i
-    for r in range(R):
-        remap[nt + r] = T + r
-
-    def m(sym: int) -> int:
-        return remap[int(sym)]
-
     S = T + R
+
     sym_left = np.full(S, -1, dtype=np.int32)
     sym_right = np.full(S, -1, dtype=np.int32)
     sym_sum = np.zeros(S, dtype=np.int32)
     sym_len = np.ones(S, dtype=np.int32)
     sym_sum[:T] = term_values
-    for r in range(R):
-        l, rr = g.rules[r]
-        sym_left[T + r] = m(l)
-        sym_right[T + r] = m(rr)
-        sym_sum[T + r] = g.sums[r]
-        sym_len[T + r] = g.lengths[r]
+    if R:
+        sym_left[T:] = _dense_remap(g.rules[:, 0], term_values, nt)
+        sym_right[T:] = _dense_remap(g.rules[:, 1], term_values, nt)
+        sym_sum[T:] = g.sums.astype(np.int32)
+        sym_len[T:] = g.lengths.astype(np.int32)
 
-    c_dense = np.asarray([m(s) for s in res.seq], dtype=np.int32)
+    c_dense = _dense_remap(res.seq, term_values, nt)
 
     bs = bsamp or build_b_sampling(res, B)
     kbits = np.asarray(bs.kbits, dtype=np.int32)
-    bucket_offsets = np.zeros(res.num_lists + 1, dtype=np.int32)
-    for i in range(res.num_lists):
-        bucket_offsets[i + 1] = bucket_offsets[i] + bs.c_pos[i].size
-    bck_c_pos = (np.concatenate(bs.c_pos) if res.num_lists else
+    bucket_counts = np.asarray([cp.size for cp in bs.c_pos], dtype=np.int64)
+    bucket_offsets = np.zeros(L + 1, dtype=np.int32)
+    np.cumsum(bucket_counts, out=bucket_offsets[1:])
+    bck_c_pos = (np.concatenate(bs.c_pos) if L else
                  np.zeros(0)).astype(np.int32)
-    bck_abs = (np.concatenate(bs.abs_before) if res.num_lists else
+    bck_abs = (np.concatenate(bs.abs_before) if L else
                np.zeros(0)).astype(np.int32)
 
     # static scan bound: max symbols between consecutive bucket anchors,
     # plus the tail from the final anchor to the end of the list span.
+    starts = res.starts.astype(np.int64)
+    spans = starts[1:] - starts[:-1]
     max_scan = 1
-    for i in range(res.num_lists):
-        cp = bs.c_pos[i]
-        span = res.compressed_length(i)
-        if cp.size > 1:
-            max_scan = max(max_scan, int(np.max(np.diff(cp))) + 1)
-        max_scan = max(max_scan, span - (int(cp[-1]) if cp.size else 0) + 1)
+    if bck_c_pos.size:
+        diffs = np.diff(bck_c_pos.astype(np.int64))
+        # mask out differences that straddle a list boundary
+        keep = np.ones(diffs.size, dtype=bool)
+        inner = bucket_offsets[1:-1].astype(np.int64) - 1
+        keep[inner[(inner >= 0) & (inner < diffs.size)]] = False
+        if keep.any():
+            max_scan = max(max_scan, int(diffs[keep].max()) + 1)
+    # tail per list: span - last anchor (0 when the list has no buckets)
+    last_anchor = np.zeros(L, dtype=np.int64)
+    has_b = bucket_counts > 0
+    last_anchor[has_b] = bck_c_pos[bucket_offsets[1:][has_b] - 1]
+    if L:
+        max_scan = max(max_scan, int((spans - last_anchor).max()) + 1)
 
     sums = _phrase_sums_for(res.seq, g)
-    lasts = np.empty(res.num_lists, dtype=np.int32)
-    for i in range(res.num_lists):
-        sp = slice(int(res.starts[i]), int(res.starts[i + 1]))
-        lasts[i] = int(res.first_values[i]) + int(sums[sp].sum())
+    csum = np.concatenate([[0], np.cumsum(sums)])
+    lasts = (res.first_values.astype(np.int64)
+             + (csum[starts[1:]] - csum[starts[:-1]])).astype(np.int32)
 
     return FlatIndex(
         sym_left=jnp.asarray(sym_left),
         sym_right=jnp.asarray(sym_right),
         sym_sum=jnp.asarray(sym_sum),
         sym_len=jnp.asarray(sym_len),
-        num_terminals=T,
-        max_depth=max(1, int(g.max_depth())),
         c=jnp.asarray(c_dense),
         starts=jnp.asarray(res.starts.astype(np.int32)),
         firsts=jnp.asarray(res.first_values.astype(np.int32)),
@@ -150,6 +177,8 @@ def build_flat_index(res: RePairResult, B: int = 8,
         bucket_offsets=jnp.asarray(bucket_offsets),
         bck_c_pos=jnp.asarray(bck_c_pos),
         bck_abs=jnp.asarray(bck_abs),
+        num_terminals=T,
+        max_depth=max(1, int(g.max_depth())),
         max_scan=max_scan,
         universe=int(res.universe),
     )

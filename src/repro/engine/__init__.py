@@ -1,0 +1,57 @@
+"""Backend-pluggable query engine over the Re-Pair compressed index
+(DESIGN.md §2.4).
+
+One API — ``next_geq_batch`` / ``member_batch`` / ``intersect_pairs`` /
+``intersect_multi`` — three interchangeable backends:
+
+* ``host``   — the paper's CPU cursor structures (§3.2–3.3);
+* ``jnp``    — vmapped fixed-trip-count jnp programs (reference);
+* ``pallas`` — the fused ``list_intersect`` TPU kernel.
+
+    eng = make_engine("pallas", repair_result)
+    eng.intersect_pairs([(3, 17), (4, 9)])
+    eng.intersect_multi([3, 17, 42])          # k-term AND
+
+This is the seam every scaling PR (sharding, async batching, multi-host)
+plugs into: consumers depend on the API, never on a backend.
+"""
+
+from __future__ import annotations
+
+from ..core.repair import RePairResult
+from .base import Engine
+from .device import DeviceEngine, JnpEngine
+from .host import HostEngine
+from .pallas_engine import PallasEngine
+
+ENGINES: dict[str, type[Engine]] = {
+    "host": HostEngine,
+    "jnp": JnpEngine,
+    "pallas": PallasEngine,
+}
+
+
+def validate_engines(names) -> None:
+    """Raise early (before any expensive index build / benchmark sweep)
+    on unknown backend names."""
+    unknown = set(names) - set(ENGINES)
+    if unknown:
+        raise ValueError(f"unknown engine(s) {sorted(unknown)}; "
+                         f"choose from {sorted(ENGINES)}")
+
+
+def make_engine(name: str, res: RePairResult, **kwargs) -> Engine:
+    """Construct an engine by backend name.  kwargs pass through to the
+    backend constructor (``fi``, ``max_short_len``, ``B``, ``interpret``,
+    ``method``, ...)."""
+    try:
+        cls = ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; choose from {sorted(ENGINES)}"
+        ) from None
+    return cls(res, **kwargs)
+
+
+__all__ = ["Engine", "DeviceEngine", "HostEngine", "JnpEngine",
+           "PallasEngine", "ENGINES", "make_engine", "validate_engines"]

@@ -1,0 +1,79 @@
+"""The backend-pluggable query engine API (DESIGN.md §2.4).
+
+One interface, three interchangeable backends:
+
+* :class:`~repro.engine.host.HostEngine`   — the paper's host cursor
+  structures (``CompressedList`` / ``SampledList`` / ``LookupList``);
+* :class:`~repro.engine.JnpEngine`         — pure-jnp fixed-trip-count
+  programs (the bit-exact reference for the kernel);
+* :class:`~repro.engine.PallasEngine`      — the fused ``list_intersect``
+  Pallas kernel (bucket lookup + phrase-sum skipping + grammar descent in
+  one ``pallas_call``).
+
+Every operation takes/returns **numpy** at the boundary so callers
+(server, benchmarks, examples) are backend-agnostic; sentinel for "no
+element" is ``INT_INF`` (int32 max).
+
+The four operations:
+
+* ``next_geq_batch(list_ids, xs)`` — smallest element >= x per query;
+* ``member_batch(list_ids, xs)``   — boolean membership per query;
+* ``intersect_pairs(pairs)``       — batched 2-term conjunctive queries;
+* ``intersect_multi(idxs)``        — one k-term conjunctive query,
+  pairwise svs from shortest to longest by *uncompressed* length (§3.3 —
+  Re-Pair compressed lengths are non-monotonic).
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Sequence
+
+import numpy as np
+
+from ..core.jax_index import INT_INF
+from ..core.repair import RePairResult
+
+
+class Engine(abc.ABC):
+    """Backend-pluggable query engine over one Re-Pair compressed index."""
+
+    name: str = "abstract"
+
+    def __init__(self, res: RePairResult):
+        self.res = res
+        self.lengths = np.asarray(res.orig_lengths, dtype=np.int64)
+
+    # -- point operations ---------------------------------------------------
+
+    @abc.abstractmethod
+    def next_geq_batch(self, list_ids: np.ndarray,
+                       xs: np.ndarray) -> np.ndarray:
+        """(Q,) int32 values; INT_INF where no element >= x exists."""
+
+    def member_batch(self, list_ids: np.ndarray, xs: np.ndarray) -> np.ndarray:
+        return self.next_geq_batch(list_ids, xs) == np.asarray(xs)
+
+    # -- conjunctive queries ------------------------------------------------
+
+    @abc.abstractmethod
+    def intersect_pairs(self, pairs: Sequence[tuple[int, int]]
+                        ) -> list[np.ndarray]:
+        """Batched (term AND term); each result is a sorted int64 id array."""
+
+    @abc.abstractmethod
+    def intersect_multi(self, idxs: Sequence[int]) -> np.ndarray:
+        """One k-term AND query; sorted int64 id array."""
+
+    # -- helpers shared by the backends -------------------------------------
+
+    def order_by_length(self, idxs: Sequence[int]) -> list[int]:
+        """Shortest-first by UNCOMPRESSED length, the [BLOL06] svs order the
+        paper adopts in §3.3."""
+        return sorted(idxs, key=lambda i: int(self.lengths[i]))
+
+    @staticmethod
+    def compact(row: np.ndarray) -> np.ndarray:
+        """Strip INT_INF sentinels from a padded device row."""
+        row = np.asarray(row)
+        return row[row != int(INT_INF)].astype(np.int64)

@@ -1,0 +1,130 @@
+"""Device engines: the shared batching/routing logic plus the jnp backend.
+
+``DeviceEngine`` owns everything backend-independent — expansion of the
+short side, (short, long) normalization, candidate thinning for k-term
+queries, host fallback for degenerate pairs — and delegates exactly one
+primitive to the concrete backend: the batched next_geq probe.  JnpEngine
+implements it with the vmapped fixed-trip-count program
+(``engine/jnp_backend.py``); PallasEngine with the fused ``list_intersect``
+kernel.  Both are therefore interchangeable anywhere, and must agree
+bit-exactly.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.jax_index import FlatIndex, INT_INF, build_flat_index
+from ..core.repair import RePairResult
+from .base import Engine
+from .host import HostEngine
+from . import jnp_backend as J
+
+
+class DeviceEngine(Engine):
+    """Backend-independent device-engine scaffolding.
+
+    ``max_short_len`` is the static expansion cap of the device program:
+    pairs (or k-term queries) whose *shortest* list exceeds it route to the
+    host fallback engine, exactly like a real serving tier routes outliers.
+    """
+
+    def __init__(self, res: RePairResult, fi: FlatIndex | None = None,
+                 max_short_len: int = 256, B: int = 8,
+                 fallback: Engine | None = None):
+        super().__init__(res)
+        self.fi = fi if fi is not None else build_flat_index(res, B=B)
+        self.max_short_len = max_short_len
+        self._B = B
+        self._fallback = fallback
+
+    @property
+    def fallback(self) -> Engine:
+        """Host fallback, built lazily on the first outlier route — its
+        (b)-sampling duplicates the one inside build_flat_index, so paying
+        for it only when a query actually needs it keeps engine
+        construction to one sampling pass."""
+        if self._fallback is None:
+            self._fallback = HostEngine(self.res, method="lookup",
+                                        B=self._B)
+        return self._fallback
+
+    # -- the one backend-specific primitive --------------------------------
+
+    @abc.abstractmethod
+    def _next_geq_dev(self, list_ids: jax.Array, xs: jax.Array) -> jax.Array:
+        """(Q,) ids × (Q,) probes -> (Q,) int32 device array."""
+
+    @abc.abstractmethod
+    def _probe_dev(self, long_ids: jax.Array, xs: jax.Array) -> jax.Array:
+        """(B,) ids × (B, M) probes -> (B, M) int32 device array."""
+
+    # -- engine API ---------------------------------------------------------
+
+    def next_geq_batch(self, list_ids: np.ndarray,
+                       xs: np.ndarray) -> np.ndarray:
+        return np.asarray(self._next_geq_dev(
+            jnp.asarray(list_ids, jnp.int32), jnp.asarray(xs, jnp.int32)))
+
+    def intersect_pairs(self, pairs: Sequence[tuple[int, int]]
+                        ) -> list[np.ndarray]:
+        shorts: list[int] = []
+        longs: list[int] = []
+        order: list[int] = []
+        host_route: list[tuple[int, int, int]] = []
+        for qi, (a, b) in enumerate(pairs):
+            a, b = self.order_by_length([a, b])
+            if self.lengths[a] > self.max_short_len:
+                host_route.append((qi, a, b))
+            else:
+                order.append(qi)
+                shorts.append(a)
+                longs.append(b)
+        out: list[np.ndarray | None] = [None] * len(pairs)
+        if shorts:
+            mat = J.expand_batch(self.fi, jnp.asarray(shorts, jnp.int32),
+                                 self.max_short_len)
+            vals = self._probe_dev(jnp.asarray(longs, jnp.int32), mat)
+            kept = np.asarray(J.match_mask(vals, mat))
+            for qi, row in zip(order, kept):
+                out[qi] = self.compact(row)
+        for qi, a, b in host_route:     # outlier route: host svs
+            out[qi] = self.fallback.intersect_pairs([(a, b)])[0]
+        return out  # type: ignore[return-value]
+
+    def intersect_multi(self, idxs: Sequence[int]) -> np.ndarray:
+        """Device-side pairwise svs, shortest-first by uncompressed length
+        (§3.3): expand the shortest list once, then thin the candidate row
+        through every longer list with batched next_geq probes.  The row
+        keeps its (1, max_short_len) shape throughout, so all k-1 probe
+        rounds hit one jit cache entry."""
+        order = self.order_by_length(idxs)
+        if not order:
+            return np.empty(0, dtype=np.int64)
+        if self.lengths[order[0]] > self.max_short_len:
+            return self.fallback.intersect_multi(idxs)
+        cand = J.expand_batch(self.fi, jnp.asarray(order[:1], jnp.int32),
+                              self.max_short_len)          # (1, M)
+        for i in order[1:]:
+            vals = self._probe_dev(jnp.asarray([i], jnp.int32), cand)
+            cand = J.match_mask(vals, cand)
+        return self.compact(np.asarray(cand[0]))
+
+
+class JnpEngine(DeviceEngine):
+    """Fixed-trip-count vmapped jnp programs (the kernel's bit-exact
+    reference)."""
+
+    name = "jnp"
+
+    def _next_geq_dev(self, list_ids: jax.Array, xs: jax.Array) -> jax.Array:
+        return J.next_geq_batch(self.fi, list_ids, xs)
+
+    def _probe_dev(self, long_ids: jax.Array, xs: jax.Array) -> jax.Array:
+        return J.probe_batch(self.fi, long_ids, xs)

@@ -1,0 +1,189 @@
+"""Pure-jnp implementation of the engine operations (DESIGN.md §2.4).
+
+This module absorbs the old ``core/batched.py`` closure factories into
+module-level jitted functions that take the :class:`FlatIndex` **as a traced
+pytree argument**: the static bounds (``max_scan``, ``max_depth``,
+``num_terminals``) travel as aux data, the arrays as tracers, so one jit
+cache entry serves every index whose bounds agree — rebuilding the index
+does not retrace.
+
+All functions are fixed-trip-count (no data-dependent shapes); this is the
+reference implementation the fused Pallas kernel is checked against
+bit-exactly.
+
+Semantics mirror ``core/intersect.py::LookupList.next_geq``:
+  * bucket lookup gives a start state (symbol offset j, absolute value s),
+  * phrase-sum skipping advances while s + sum < x,
+  * a fixed-depth descent resolves the answer inside the phrase.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.jax_index import FlatIndex, INT_INF
+
+
+def _next_geq_one(fi: FlatIndex, list_id: jax.Array, x: jax.Array) -> jax.Array:
+    """Smallest element >= x in list ``list_id``; INT_INF if none."""
+    T = fi.num_terminals
+
+    start = fi.starts[list_id]
+    end = fi.starts[list_id + 1]
+    first = fi.firsts[list_id]
+    last = fi.lasts[list_id]
+
+    # bucket lookup — direct addressing, the [ST07] "lookup" strategy
+    b = jax.lax.shift_right_logical(x, fi.kbits[list_id])
+    boff = fi.bucket_offsets[list_id]
+    bnum = fi.bucket_offsets[list_id + 1] - boff
+    b = jnp.minimum(b, bnum - 1)
+    j = fi.bck_c_pos[boff + b]
+    s = fi.bck_abs[boff + b]
+    # if x <= first, the head answers
+    j = jnp.where(x <= first, 0, j)
+    s = jnp.where(x <= first, first, s)
+
+    # phrase-sum skipping: fixed trip count, masked updates
+    def scan_body(_, js):
+        j, s = js
+        in_range = start + j < end
+        sym = jnp.where(in_range,
+                        fi.c[jnp.minimum(start + j, fi.c.shape[0] - 1)], 0)
+        ps = jnp.where(in_range, fi.sym_sum[sym], 0)
+        take = in_range & (s + ps < x)
+        return (j + jnp.where(take, 1, 0), s + jnp.where(take, ps, 0))
+
+    j, s = jax.lax.fori_loop(0, fi.max_scan, scan_body, (j, s))
+
+    # if s >= x the previous element already answers (possible when the
+    # bucket anchor lands exactly on an element >= x)
+    done_early = s >= x
+    past_end = start + j >= end
+
+    # descent: choose left while s+sum(left) >= x else consume left
+    sym0 = fi.c[jnp.minimum(start + j, fi.c.shape[0] - 1)]
+
+    def descend_body(_, state):
+        sym, s = state
+        is_rule = sym >= T
+        l = jnp.where(is_rule, fi.sym_left[sym], sym)
+        r = jnp.where(is_rule, fi.sym_right[sym], sym)
+        ls = fi.sym_sum[l]
+        go_left = s + ls >= x
+        new_sym = jnp.where(go_left, l, r)
+        new_s = jnp.where(go_left, s, s + ls)
+        return (jnp.where(is_rule, new_sym, sym),
+                jnp.where(is_rule, new_s, s))
+
+    sym_f, s_f = jax.lax.fori_loop(0, fi.max_depth, descend_body, (sym0, s))
+    answer = s_f + fi.sym_sum[sym_f]  # terminal closes the element
+
+    out = jnp.where(done_early, s, answer)
+    out = jnp.where(past_end & ~done_early, INT_INF, out)
+    out = jnp.where(x > last, INT_INF, out)
+    return out.astype(jnp.int32)
+
+
+@jax.jit
+def next_geq_batch(fi: FlatIndex, list_ids: jax.Array,
+                   xs: jax.Array) -> jax.Array:
+    """(Q,) list ids × (Q,) probes -> (Q,) smallest element >= x (INT_INF)."""
+    return jax.vmap(partial(_next_geq_one, fi))(list_ids, xs)
+
+
+@jax.jit
+def member_batch(fi: FlatIndex, list_ids: jax.Array,
+                 xs: jax.Array) -> jax.Array:
+    return next_geq_batch(fi, list_ids, xs) == xs
+
+
+@jax.jit
+def probe_batch(fi: FlatIndex, long_ids: jax.Array,
+                xs: jax.Array) -> jax.Array:
+    """Row-wise next_geq: (B,) list ids × (B, M) probes -> (B, M) values."""
+
+    def one(lid, row):
+        return jax.vmap(lambda x: _next_geq_one(fi, lid, x))(row)
+
+    return jax.vmap(one)(long_ids, xs)
+
+
+@partial(jax.jit, static_argnames=("max_len",))
+def expand_batch(fi: FlatIndex, list_ids: jax.Array, max_len: int) -> jax.Array:
+    """Batched full-list expansion: decode list -> (max_len,) absolute ids
+    padded with INT_INF.  Pointer-free positional descent: output slot t
+    finds the t-th element by walking the grammar with per-node length
+    counters (sym_len) — O(max_depth) per element, fully parallel."""
+    T = fi.num_terminals
+
+    def one(list_id):
+        start = fi.starts[list_id]
+        end = fi.starts[list_id + 1]
+        first = fi.firsts[list_id]
+        length = fi.lengths[list_id]
+
+        # per-symbol expanded lengths and their prefix sums over a fixed
+        # window of the span (padded with zeros)
+        win = max_len  # symbols <= elements
+        idx = start + jnp.arange(win, dtype=jnp.int32)
+        valid = idx < end
+        syms = jnp.where(valid, fi.c[jnp.minimum(idx, fi.c.shape[0] - 1)], 0)
+        lens = jnp.where(valid, fi.sym_len[syms], 0)
+        sums = jnp.where(valid, fi.sym_sum[syms], 0)
+        cum_len = jnp.cumsum(lens)           # elements after symbol i
+        cum_sum = jnp.cumsum(sums) + first   # abs value after symbol i
+
+        # element t (1-based among gap-elements) lives in the symbol whose
+        # cum_len first reaches t
+        t = jnp.arange(1, max_len + 1, dtype=jnp.int32)
+        k = jnp.searchsorted(cum_len, t, side="left").astype(jnp.int32)
+        k = jnp.minimum(k, win - 1)
+        base_s = jnp.where(k > 0, cum_sum[jnp.maximum(k - 1, 0)], first)
+        base_t = jnp.where(k > 0, cum_len[jnp.maximum(k - 1, 0)], 0)
+        sym0 = syms[k]
+        # positional descent: want the (t - base_t)-th element of sym0
+        want = t - base_t  # 1-based within the phrase
+
+        def body(_, state):
+            sym, s, w = state
+            is_rule = sym >= T
+            l = jnp.where(is_rule, fi.sym_left[sym], sym)
+            r = jnp.where(is_rule, fi.sym_right[sym], sym)
+            ll = fi.sym_len[l]
+            go_left = w <= ll
+            nsym = jnp.where(go_left, l, r)
+            ns = jnp.where(go_left, s, s + fi.sym_sum[l])
+            nw = jnp.where(go_left, w, w - ll)
+            return (jnp.where(is_rule, nsym, sym),
+                    jnp.where(is_rule, ns, s),
+                    jnp.where(is_rule, nw, w))
+
+        symf, sf, _ = jax.lax.fori_loop(
+            0, fi.max_depth, body, (sym0, base_s, want))
+        vals = sf + fi.sym_sum[symf]
+        # element 0 is the head; shift: output[0]=first, output[i]=vals[i-1]
+        out = jnp.concatenate([first[None], vals[: max_len - 1]])
+        pos = jnp.arange(max_len, dtype=jnp.int32)
+        return jnp.where(pos < length, out, INT_INF).astype(jnp.int32)
+
+    return jax.vmap(one)(list_ids)
+
+
+def match_mask(vals: jax.Array, xs: jax.Array) -> jax.Array:
+    """Keep probes that hit: INT_INF padding never matches."""
+    return jnp.where((vals == xs) & (xs != INT_INF), xs, INT_INF)
+
+
+@partial(jax.jit, static_argnames=("max_len",))
+def pair_intersect(fi: FlatIndex, short_ids: jax.Array, long_ids: jax.Array,
+                   max_len: int) -> jax.Array:
+    """Batched pairwise svs: expand the short list (padded) and probe the
+    long one.  Returns (B, max_len) int32 with INT_INF at non-members /
+    padding — callers compact on host or count via (res != INT_INF).sum(-1)."""
+    shorts = expand_batch(fi, short_ids, max_len)       # (B, M)
+    vals = probe_batch(fi, long_ids, shorts)
+    return match_mask(vals, shorts)

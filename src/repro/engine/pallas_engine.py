@@ -1,0 +1,47 @@
+"""PallasEngine: the fused ``list_intersect`` kernel behind the engine API.
+
+The whole hot path — bucket lookup, phrase-sum skipping, fixed-depth
+grammar descent — runs in ONE ``pallas_call`` per probe batch
+(``kernels/list_intersect``); expansion of the short side reuses the jnp
+positional-descent program (it is outside the per-probe critical path).
+The lane-padded kernel operands are computed once at construction and
+reused for every launch, so per-batch work is the kernel alone.
+
+``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere —
+the same convention as the other kernels' ops wrappers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.jax_index import FlatIndex
+from ..core.repair import RePairResult
+from ..kernels import should_interpret
+from ..kernels.list_intersect import ops as K
+from .base import Engine
+from .device import DeviceEngine
+
+
+class PallasEngine(DeviceEngine):
+    name = "pallas"
+
+    def __init__(self, res: RePairResult, fi: FlatIndex | None = None,
+                 max_short_len: int = 256, B: int = 8,
+                 fallback: Engine | None = None,
+                 interpret: bool | None = None):
+        super().__init__(res, fi=fi, max_short_len=max_short_len, B=B,
+                         fallback=fallback)
+        self.interpret = (should_interpret() if interpret is None
+                          else interpret)
+        self._tables, self._statics = K.pad_index_operands(self.fi)
+
+    def _next_geq_dev(self, list_ids: jax.Array, xs: jax.Array) -> jax.Array:
+        return K.next_geq_padded(self._tables, list_ids, xs,
+                                 interpret=self.interpret, **self._statics)
+
+    def _probe_dev(self, long_ids: jax.Array, xs: jax.Array) -> jax.Array:
+        B, M = xs.shape
+        flat_ids = jnp.repeat(long_ids.astype(jnp.int32), M)
+        return self._next_geq_dev(flat_ids, xs.reshape(-1)).reshape(B, M)

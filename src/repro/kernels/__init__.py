@@ -1,7 +1,7 @@
 """Pallas TPU kernels for the query-time hot spots of the Re-Pair index.
 
-Four kernels (each: <name>.py pallas_call + BlockSpec, ops.py jit wrapper,
-ref.py pure-jnp oracle):
+Five kernels (each: <name>.py pallas_call + BlockSpec, ops.py jit wrapper,
+ref.py oracle):
 
 * ``gap_decode``      — tiled exclusive-carry prefix sum: d-gaps -> doc ids.
 * ``grammar_expand``  — positional phrase expansion via fixed-depth descent;
@@ -11,7 +11,19 @@ ref.py pure-jnp oracle):
                         adaptation of [ST07] lookup: aligned buckets of two
                         lists intersect bucket-locally in VMEM).
 * ``bitmap_and``      — word-wise AND + popcount for the [MC07] hybrid.
+* ``list_intersect``  — the FUSED query path: bucket lookup + phrase-sum
+                        skipping + fixed-depth grammar descent in one
+                        pallas_call; backs ``repro.engine.PallasEngine``
+                        and is checked bit-exactly against the jnp engine.
 
 All validated on CPU with interpret=True against their refs; BlockSpecs are
 written for TPU v5e VMEM (tiles are multiples of (8, 128) lanes).
 """
+
+import jax
+
+
+def should_interpret() -> bool:
+    """Shared interpret-mode auto-select: compiled on TPU, interpreter
+    everywhere else.  Every kernel ops wrapper defaults to this."""
+    return jax.default_backend() != "tpu"

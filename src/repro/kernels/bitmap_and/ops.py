@@ -10,8 +10,7 @@ import jax.numpy as jnp
 from .bitmap_and import TILE_C, TILE_R, bitmap_and_pallas
 
 
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from .. import should_interpret as _should_interpret
 
 
 def _to_tiles(w: jax.Array) -> tuple[jax.Array, int]:

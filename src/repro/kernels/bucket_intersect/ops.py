@@ -15,8 +15,7 @@ from .bucket_intersect import TILE_B, bucket_intersect_pallas
 INT_INF = np.int32(2**31 - 1)
 
 
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from .. import should_interpret as _should_interpret
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -11,8 +11,7 @@ import jax.numpy as jnp
 from .gap_decode import TILE_C, TILE_R, gap_decode_pallas
 
 
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from .. import should_interpret as _should_interpret
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -13,8 +13,7 @@ import jax.numpy as jnp
 from .grammar_expand import PHRASE_CAP, TILE_W, grammar_expand_pallas
 
 
-def _should_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from .. import should_interpret as _should_interpret
 
 
 @partial(jax.jit, static_argnames=("max_depth", "interpret"))

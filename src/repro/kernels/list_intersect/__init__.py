@@ -1,0 +1,3 @@
+from .ops import list_intersect, next_geq, next_geq_probe
+
+__all__ = ["list_intersect", "next_geq", "next_geq_probe"]

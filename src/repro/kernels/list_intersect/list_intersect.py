@@ -1,0 +1,151 @@
+"""Pallas TPU kernel: fused next_geq over Re-Pair compressed lists.
+
+The full query-time operation of the paper (§3.2–3.3) in ONE kernel —
+previously split between host cursors and vmapped jnp — so the descent
+loop never leaves the core:
+
+  1. **bucket lookup**: direct domain addressing into the flattened
+     (b)-sampling tables ([ST07]) gives a start state (symbol offset j,
+     absolute value s);
+  2. **phrase-sum skipping**: a ``max_scan``-trip masked loop advances
+     whole phrases while ``s + sum < x`` (§3.2);
+  3. **fixed-depth grammar descent**: ``max_depth`` left/right steps by
+     partial sums resolve the answer inside the phrase (Theorem 1).
+
+Each kernel instance handles TILE_Q queries vectorized across lanes; every
+lane runs the same fixed-trip instruction stream (the bounds are static
+properties of the index).  Grammar + bucket + stream tables are broadcast
+whole into VMEM; table lookups use masked-sum one-hot gathers (same idiom
+as ``grammar_expand``) because arbitrary dynamic gathers from VMEM do not
+vectorize on the TPU — exact in int32.
+
+The compressed stream is passed twice, pre-gathered on the host side of the
+pallas_call: ``c_syms`` (dense symbol ids) and ``c_sums`` (per-position
+phrase sums, ``sym_sum[c]``) — trading one VMEM copy of C for removing a
+double gather from the skipping loop's critical path.
+
+VMEM budget per step: the widest one-hot compare is (TILE_Q, N_pad) int32 —
+128 × N lanes; for C beyond ~64K symbols the stream must be grid-blocked
+(future work, DESIGN.md §2.5); at the repo's corpus scales it fits whole.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_Q = 128
+INT_INF = 2**31 - 1  # plain int: jnp array constants can't be captured
+
+
+def _gather(table: jax.Array, idx: jax.Array, width: int) -> jax.Array:
+    """Exact int32 gather table[idx] via one-hot masked sum.
+    table (width,), idx (Q,) -> (Q,).  Out-of-range idx yields 0."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], width), 1)
+    onehot = idx[:, None] == iota
+    return jnp.sum(jnp.where(onehot, table[None, :], 0), axis=1)
+
+
+def _list_intersect_kernel(lids_ref, xs_ref, starts_ref, firsts_ref,
+                           lasts_ref, kbits_ref, boffs_ref, bpos_ref,
+                           babs_ref, csyms_ref, csums_ref, sleft_ref,
+                           sright_ref, ssum_ref, out_ref, *,
+                           max_scan: int, max_depth: int, T: int, N: int,
+                           l1_pad: int, l_pad: int, nb_pad: int,
+                           n_pad: int, s_pad: int):
+    lid = lids_ref[0, :]                       # (TILE_Q,)
+    x = xs_ref[0, :]
+    starts = starts_ref[0, :]
+    boffs = boffs_ref[0, :]
+
+    start = _gather(starts, lid, l1_pad)
+    end = _gather(starts, lid + 1, l1_pad)
+    first = _gather(firsts_ref[0, :], lid, l_pad)
+    last = _gather(lasts_ref[0, :], lid, l_pad)
+    kbit = _gather(kbits_ref[0, :], lid, l_pad)
+
+    # -- 1. bucket lookup ---------------------------------------------------
+    boff = _gather(boffs, lid, l1_pad)
+    bnum = _gather(boffs, lid + 1, l1_pad) - boff
+    b = jnp.minimum(jax.lax.shift_right_logical(x, kbit), bnum - 1)
+    j = _gather(bpos_ref[0, :], boff + b, nb_pad)
+    s = _gather(babs_ref[0, :], boff + b, nb_pad)
+    head = x <= first
+    j = jnp.where(head, 0, j)
+    s = jnp.where(head, first, s)
+
+    # -- 2. phrase-sum skipping --------------------------------------------
+    csums = csums_ref[0, :]
+
+    def scan_body(_, js):
+        j, s = js
+        in_range = start + j < end
+        ps = _gather(csums, jnp.minimum(start + j, N - 1), n_pad)
+        ps = jnp.where(in_range, ps, 0)
+        take = in_range & (s + ps < x)
+        return (j + jnp.where(take, 1, 0), s + jnp.where(take, ps, 0))
+
+    j, s = jax.lax.fori_loop(0, max_scan, scan_body, (j, s))
+    done_early = s >= x
+    past_end = start + j >= end
+
+    # -- 3. fixed-depth grammar descent ------------------------------------
+    sleft = sleft_ref[0, :]
+    sright = sright_ref[0, :]
+    ssum = ssum_ref[0, :]
+    sym0 = _gather(csyms_ref[0, :], jnp.minimum(start + j, N - 1), n_pad)
+
+    def descend_body(_, state):
+        sym, s = state
+        is_rule = sym >= T
+        l = jnp.where(is_rule, _gather(sleft, sym, s_pad), sym)
+        r = jnp.where(is_rule, _gather(sright, sym, s_pad), sym)
+        ls = _gather(ssum, l, s_pad)
+        go_left = s + ls >= x
+        new_sym = jnp.where(go_left, l, r)
+        new_s = jnp.where(go_left, s, s + ls)
+        return (jnp.where(is_rule, new_sym, sym),
+                jnp.where(is_rule, new_s, s))
+
+    sym_f, s_f = jax.lax.fori_loop(0, max_depth, descend_body, (sym0, s))
+    answer = s_f + _gather(ssum, sym_f, s_pad)
+
+    out = jnp.where(done_early, s, answer)
+    out = jnp.where(past_end & ~done_early, INT_INF, out)
+    out = jnp.where(x > last, INT_INF, out)
+    out_ref[0, :] = out
+
+
+def list_intersect_pallas(lids: jax.Array, xs: jax.Array,
+                          starts: jax.Array, firsts: jax.Array,
+                          lasts: jax.Array, kbits: jax.Array,
+                          boffs: jax.Array, bpos: jax.Array, babs: jax.Array,
+                          csyms: jax.Array, csums: jax.Array,
+                          sleft: jax.Array, sright: jax.Array,
+                          ssum: jax.Array, *, max_scan: int, max_depth: int,
+                          T: int, N: int,
+                          interpret: bool = False) -> jax.Array:
+    """lids, xs (Q,) int32, Q % TILE_Q == 0; tables 1-D int32 (padded to
+    lane multiples by the ops wrapper).  Returns (Q,) int32 next_geq values
+    (INT_INF past the end), bit-exact vs engine.jnp_backend.next_geq_batch.
+    ``N`` is the true (unpadded) length of C for index clamping."""
+    Q = lids.shape[0]
+    grid = (Q // TILE_Q,)
+    dims = dict(l1_pad=starts.shape[0], l_pad=firsts.shape[0],
+                nb_pad=bpos.shape[0], n_pad=csyms.shape[0],
+                s_pad=ssum.shape[0])
+    kernel = lambda *refs: _list_intersect_kernel(
+        *refs, max_scan=max_scan, max_depth=max_depth, T=T, N=N, **dims)
+    qspec = pl.BlockSpec((1, TILE_Q), lambda i: (0, i))
+    tspec = lambda a: pl.BlockSpec((1, a.shape[0]), lambda i: (0, 0))
+    tables = (starts, firsts, lasts, kbits, boffs, bpos, babs, csyms, csums,
+              sleft, sright, ssum)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[qspec, qspec] + [tspec(t) for t in tables],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((1, Q), jnp.int32),
+        interpret=interpret,
+    )(lids[None, :], xs[None, :], *[t[None, :] for t in tables])[0]

@@ -1,0 +1,92 @@
+"""Jitted wrappers for the fused list_intersect kernel.
+
+Two tiers:
+
+* ``pad_index_operands(fi)`` + ``next_geq_padded(...)`` — the serving path.
+  Padding the 12 index tables to lane multiples and pre-gathering the
+  per-position phrase sums (``sym_sum[c]``) is O(index size); doing it per
+  probe batch would put that on the hot path, so engines do it ONCE per
+  index and reuse the operand pack for every kernel launch.
+* ``next_geq`` / ``next_geq_probe`` / ``list_intersect`` — conveniences
+  that pad on the fly; fine for tests and one-shot calls.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import should_interpret
+from ...core.jax_index import FlatIndex
+from .list_intersect import TILE_Q, list_intersect_pallas
+
+
+def _pad1(a: jax.Array, mult: int = 128) -> jax.Array:
+    n = a.shape[0]
+    np_ = max(mult, -(-n // mult) * mult)
+    return jnp.zeros(np_, jnp.int32).at[:n].set(a.astype(jnp.int32))
+
+
+def pad_index_operands(fi: FlatIndex
+                       ) -> tuple[tuple[jax.Array, ...], dict]:
+    """Lane-padded kernel operands + static bounds for one index.  Compute
+    once per FlatIndex (PallasEngine caches this at construction)."""
+    tables = (
+        _pad1(fi.starts), _pad1(fi.firsts), _pad1(fi.lasts),
+        _pad1(fi.kbits), _pad1(fi.bucket_offsets),
+        _pad1(fi.bck_c_pos), _pad1(fi.bck_abs),
+        _pad1(fi.c), _pad1(fi.sym_sum[fi.c]),
+        _pad1(fi.sym_left), _pad1(fi.sym_right), _pad1(fi.sym_sum),
+    )
+    statics = dict(max_scan=fi.max_scan, max_depth=fi.max_depth,
+                   T=fi.num_terminals, N=int(fi.c.shape[0]))
+    return tables, statics
+
+
+@partial(jax.jit,
+         static_argnames=("max_scan", "max_depth", "T", "N", "interpret"))
+def next_geq_padded(tables: tuple[jax.Array, ...], list_ids: jax.Array,
+                    xs: jax.Array, *, max_scan: int, max_depth: int,
+                    T: int, N: int, interpret: bool) -> jax.Array:
+    """Fused next_geq over pre-padded operands: (Q,) ids × (Q,) probes ->
+    (Q,) int32 values, INT_INF where no element >= x exists."""
+    Q = list_ids.shape[0]
+    Qp = max(TILE_Q, -(-Q // TILE_Q) * TILE_Q)
+    lids = jnp.zeros(Qp, jnp.int32).at[:Q].set(list_ids.astype(jnp.int32))
+    xq = jnp.zeros(Qp, jnp.int32).at[:Q].set(xs.astype(jnp.int32))
+    out = list_intersect_pallas(
+        lids, xq, *tables, max_scan=max_scan, max_depth=max_depth,
+        T=T, N=N, interpret=interpret)
+    return out[:Q]
+
+
+def next_geq(fi: FlatIndex, list_ids: jax.Array, xs: jax.Array,
+             interpret: bool | None = None) -> jax.Array:
+    """One-shot convenience: pads the index operands on the fly."""
+    if interpret is None:
+        interpret = should_interpret()
+    tables, statics = pad_index_operands(fi)
+    return next_geq_padded(tables, list_ids, xs, interpret=interpret,
+                           **statics)
+
+
+def next_geq_probe(fi: FlatIndex, list_ids: jax.Array, xs: jax.Array,
+                   interpret: bool | None = None) -> jax.Array:
+    """Row-wise probe: (B,) list ids × (B, M) probes -> (B, M) next_geq
+    values, by flattening into one fused kernel launch."""
+    B, M = xs.shape
+    flat_ids = jnp.repeat(list_ids.astype(jnp.int32), M)
+    vals = next_geq(fi, flat_ids, xs.reshape(-1), interpret=interpret)
+    return vals.reshape(B, M)
+
+
+def list_intersect(fi: FlatIndex, long_ids: jax.Array, xs: jax.Array,
+                   interpret: bool | None = None) -> jax.Array:
+    """Membership-filter the probe matrix against the long lists: keeps
+    xs[b, m] where it occurs in list long_ids[b], INT_INF elsewhere
+    (INT_INF padding in xs never matches)."""
+    vals = next_geq_probe(fi, long_ids, xs, interpret=interpret)
+    INT_INF = jnp.int32(2**31 - 1)
+    return jnp.where((vals == xs) & (xs != INT_INF), xs, INT_INF)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused list_intersect kernel.
+
+The oracle IS the engine's jnp backend — the kernel must match it
+bit-exactly (the acceptance bar for swapping PallasEngine in for
+JnpEngine)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.jax_index import FlatIndex
+
+
+def next_geq_ref(fi: FlatIndex, list_ids: jax.Array,
+                 xs: jax.Array) -> jax.Array:
+    from ...engine import jnp_backend
+    return jnp_backend.next_geq_batch(fi, list_ids, xs)
+
+
+def list_intersect_ref(fi: FlatIndex, long_ids: jax.Array,
+                       xs: jax.Array) -> jax.Array:
+    from ...engine import jnp_backend
+    vals = jnp_backend.probe_batch(fi, long_ids, xs)
+    return jnp_backend.match_mask(vals, xs)

@@ -19,7 +19,7 @@ import time
 import numpy as np
 
 
-def serve_queries(n_queries: int) -> None:
+def serve_queries(n_queries: int, engine: str = "jnp") -> None:
     from ..core.repair import repair_compress
     from ..index import zipf_corpus
     from ..serve.query_serve import QueryServer
@@ -27,7 +27,7 @@ def serve_queries(n_queries: int) -> None:
     corpus = zipf_corpus(num_docs=2000, vocab_size=4000, seed=0)
     lists = corpus.postings()
     res = repair_compress(lists)
-    srv = QueryServer(res, max_short_len=256)
+    srv = QueryServer(res, max_short_len=256, engine=engine)
     rng = np.random.default_rng(0)
     pairs = [tuple(map(int, rng.choice(len(lists), 2, replace=False)))
              for _ in range(n_queries)]
@@ -69,9 +69,11 @@ def main() -> None:
     ap.add_argument("--tier", choices=("queries", "lm"), default="queries")
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--engine", choices=("host", "jnp", "pallas"),
+                    default="jnp")
     args = ap.parse_args()
     if args.tier == "queries":
-        serve_queries(args.n)
+        serve_queries(args.n, args.engine)
     else:
         serve_lm(args.arch, args.n)
 

@@ -1,17 +1,20 @@
 """Batched conjunctive-query serving over the device-resident Re-Pair index.
 
 This is the production tier the paper's data structure would live in
-(DESIGN.md §2: "batched query serving" replaces the paper's one-query-at-a-
+(DESIGN.md §2: batched query serving replaces the paper's one-query-at-a-
 time scan).  The server:
 
 * keeps the FlatIndex arrays device-resident (grammar in VMEM-sized
   tables, C in HBM),
-* accepts (term, term) conjunctive queries, buckets them by the shorter
-  list, and runs the batched pair-intersection program (one fused jit
-  call for the whole batch),
-* falls back to the host path for degenerate cases (very long "short"
-  lists), exactly like a real tier routes outliers.
+* routes EVERY query through the backend-pluggable engine API
+  (``repro.engine``): 2-term AND batches via ``intersect_pairs``, k-term
+  conjunctions via ``intersect_multi`` (device-side pairwise svs ordered
+  by uncompressed length, §3.3), point probes via ``member_batch``;
+* the engine itself falls back to the host path for degenerate cases
+  (very long "short" lists), exactly like a real tier routes outliers.
 
+Pick the backend at construction: ``engine="jnp"`` (default, portable),
+``"pallas"`` (fused TPU kernel), or ``"host"`` (CPU reference).
 Throughput, not per-query latency, is the serving metric (DESIGN.md §2
 "assumption changes").
 """
@@ -22,51 +25,55 @@ from typing import Sequence
 
 import numpy as np
 
-import jax.numpy as jnp
-
-from ..core.jax_index import FlatIndex, INT_INF, build_flat_index
-from ..core.batched import make_member, make_next_geq, make_pair_intersect
-from ..core import intersect as I
+from ..core.jax_index import FlatIndex, build_flat_index
 from ..core.repair import RePairResult
+from ..engine import DeviceEngine, Engine, make_engine
 
 
 class QueryServer:
     def __init__(self, res: RePairResult, max_short_len: int = 256,
-                 B: int = 8):
+                 B: int = 8, engine: str = "jnp",
+                 interpret: bool | None = None):
         self.res = res
-        self.fi: FlatIndex = build_flat_index(res, B=B)
+        self._B = B
+        self._fi: FlatIndex | None = None
         self.max_short_len = max_short_len
-        self.pair_fn = make_pair_intersect(self.fi, max_short_len)
-        self.member_fn = make_member(self.fi)
-        self.next_geq_fn = make_next_geq(self.fi)
-        self.lengths = np.asarray(res.orig_lengths)
+        kwargs: dict = {}
+        if engine in ("jnp", "pallas"):
+            kwargs = dict(max_short_len=max_short_len, B=B)
+            if engine == "pallas":
+                kwargs["interpret"] = interpret
+        self.engine: Engine = make_engine(engine, res, **kwargs)
+        if isinstance(self.engine, DeviceEngine):
+            self._fi = self.engine.fi
+
+    @property
+    def fi(self) -> FlatIndex:
+        """Device index; built lazily so a host-tier server never pays the
+        flatten + second sampling pass it would not use."""
+        if self._fi is None:
+            self._fi = build_flat_index(self.res, B=self._B)
+        return self._fi
 
     # -- batched API ----------------------------------------------------------
 
     def member_batch(self, list_ids: np.ndarray, xs: np.ndarray) -> np.ndarray:
-        return np.asarray(self.member_fn(jnp.asarray(list_ids, jnp.int32),
-                                         jnp.asarray(xs, jnp.int32)))
+        return np.asarray(self.engine.member_batch(
+            np.asarray(list_ids, np.int32), np.asarray(xs, np.int32)))
+
+    def next_geq_batch(self, list_ids: np.ndarray,
+                       xs: np.ndarray) -> np.ndarray:
+        return self.engine.next_geq_batch(
+            np.asarray(list_ids, np.int32), np.asarray(xs, np.int32))
 
     def and_batch(self, pairs: Sequence[tuple[int, int]]
                   ) -> list[np.ndarray]:
         """Batch of conjunctive (term_i AND term_j) queries."""
-        shorts, longs, route_host = [], [], []
-        order = []
-        for qi, (a, b) in enumerate(pairs):
-            if self.lengths[a] > self.lengths[b]:
-                a, b = b, a
-            if self.lengths[a] > self.max_short_len:
-                route_host.append((qi, a, b))
-            else:
-                order.append(qi)
-                shorts.append(a)
-                longs.append(b)
-        out: list[np.ndarray | None] = [None] * len(pairs)
-        if shorts:
-            mat = np.asarray(self.pair_fn(
-                jnp.asarray(shorts, jnp.int32), jnp.asarray(longs, jnp.int32)))
-            for qi, row in zip(order, mat):
-                out[qi] = row[row != int(INT_INF)].astype(np.int64)
-        for qi, a, b in route_host:      # outlier route: host svs
-            out[qi] = I.intersect_skip(self.res, a, b)
-        return out  # type: ignore[return-value]
+        return self.engine.intersect_pairs(pairs)
+
+    def and_multi(self, queries: Sequence[Sequence[int]]
+                  ) -> list[np.ndarray]:
+        """Batch of k-term conjunctive queries (arbitrary k >= 1 per query):
+        each runs as device-side pairwise svs, shortest list first by
+        uncompressed length — the [BLOL06] order the paper adopts in §3.3."""
+        return [self.engine.intersect_multi(list(q)) for q in queries]

@@ -1,10 +1,11 @@
 """Device-resident flat index + batched query engine vs the numpy oracle."""
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.jax_index import build_flat_index, INT_INF
+from repro.core.jax_index import build_flat_index, FlatIndex, INT_INF
 from repro.core.batched import (make_expand, make_member, make_next_geq,
                                 make_pair_intersect)
 from repro.core.repair import repair_compress
@@ -93,6 +94,42 @@ def test_query_server_host_fallback(lists, repair_result):
     out = qs.and_batch([(big[0], big[1])])[0]
     np.testing.assert_array_equal(
         out, np.intersect1d(lists[big[0]], lists[big[1]]))
+
+
+def test_flat_index_pytree_roundtrip(flat):
+    """FlatIndex is a registered pytree: arrays are leaves, the static
+    bounds are aux data, and flatten/unflatten is lossless."""
+    leaves, treedef = jax.tree.flatten(flat)
+    assert all(hasattr(l, "shape") for l in leaves)
+    fi2 = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(fi2, FlatIndex)
+    for f in ("num_terminals", "max_depth", "max_scan", "universe"):
+        assert getattr(fi2, f) == getattr(flat, f)
+    for a, b in zip(leaves, jax.tree.leaves(fi2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_index_no_retrace_on_content_change(flat):
+    """Engines take the index as a traced argument: changing array CONTENTS
+    (an index rebuild with the same static bounds) must hit the same jit
+    cache entry — no retrace."""
+    traces = []
+
+    @jax.jit
+    def f(fi):
+        traces.append(1)
+        return fi.c.sum() + fi.sym_sum.sum()
+
+    f(flat)
+    leaves, treedef = jax.tree.flatten(flat)
+    flat2 = jax.tree.unflatten(treedef, [l + 1 for l in leaves])
+    f(flat2)
+    assert len(traces) == 1, "content change retraced the engine program"
+    # changing a STATIC bound is a different program -> retrace
+    import dataclasses as dc
+    flat3 = dc.replace(flat, max_scan=flat.max_scan + 1)
+    f(flat3)
+    assert len(traces) == 2
 
 
 def test_flat_index_tables(repair_result, flat):

@@ -15,6 +15,9 @@ from repro.kernels.bucket_intersect.ref import bucket_intersect_ref
 from repro.kernels.grammar_expand.ops import grammar_expand
 from repro.kernels.grammar_expand.ref import grammar_expand_ref
 from repro.kernels.grammar_expand.grammar_expand import PHRASE_CAP
+from repro.kernels.list_intersect.ops import list_intersect, next_geq
+from repro.kernels.list_intersect.ref import (list_intersect_ref,
+                                              next_geq_ref)
 from repro.core.repair import repair_compress
 from repro.core.jax_index import build_flat_index
 
@@ -91,6 +94,55 @@ def test_bucket_intersect_shapes(nb, cap, rng):
         sv = got[r][got[r] != INT_INF]
         np.testing.assert_array_equal(np.sort(sv),
                                       np.intersect1d(av, bv))
+
+
+# -- list_intersect (fused next_geq) ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def li_flat(repair_result):
+    return build_flat_index(repair_result)
+
+
+@pytest.mark.parametrize("nq", [1, 100, 128, 300])
+def test_list_intersect_next_geq_bitexact(lists, li_flat, rng, nq):
+    """The fused kernel (bucket lookup + phrase-sum skip + descent in one
+    pallas_call) must match the jnp engine bit-exactly, across Q paddings."""
+    L = len(lists)
+    lids = rng.integers(0, L, nq).astype(np.int32)
+    xs = rng.integers(0, li_flat.universe + 100, nq).astype(np.int32)
+    got = np.asarray(next_geq(li_flat, jnp.asarray(lids), jnp.asarray(xs),
+                              interpret=True))
+    ref = np.asarray(next_geq_ref(li_flat, jnp.asarray(lids),
+                                  jnp.asarray(xs)))
+    np.testing.assert_array_equal(got, ref)
+    # and vs ground truth
+    for q, (li, x) in enumerate(zip(lids, xs)):
+        arr = lists[li]
+        pos = np.searchsorted(arr, x)
+        want = arr[pos] if pos < len(arr) else INT_INF
+        assert got[q] == want
+
+
+def test_list_intersect_probe_matrix(lists, li_flat, rng):
+    """2-D membership filtering: INT_INF-padded probe rows against long
+    lists, kernel vs jnp reference bit-exact."""
+    L = len(lists)
+    B, M = 6, 64
+    long_ids = rng.integers(0, L, B).astype(np.int32)
+    xs = np.full((B, M), INT_INF, dtype=np.int32)
+    for r in range(B):
+        n = int(rng.integers(1, M))
+        xs[r, :n] = np.sort(rng.integers(0, li_flat.universe, n))
+    got = np.asarray(list_intersect(li_flat, jnp.asarray(long_ids),
+                                    jnp.asarray(xs), interpret=True))
+    ref = np.asarray(list_intersect_ref(li_flat, jnp.asarray(long_ids),
+                                        jnp.asarray(xs)))
+    np.testing.assert_array_equal(got, ref)
+    for r in range(B):
+        probes = xs[r][xs[r] != INT_INF]
+        kept = got[r][got[r] != INT_INF]
+        np.testing.assert_array_equal(
+            np.unique(kept), np.intersect1d(probes, lists[long_ids[r]]))
 
 
 # -- grammar_expand ---------------------------------------------------------------

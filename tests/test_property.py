@@ -1,7 +1,15 @@
-"""Hypothesis property tests on the system's invariants."""
+"""Hypothesis property tests on the system's invariants.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); the
+module skips cleanly when it is absent so the tier-1 suite stays green on
+a bare interpreter.
+"""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import intersect as I
 from repro.core.dictionary import build_forest
