@@ -5,6 +5,12 @@ engine axis (``--engine host,jnp,pallas``): the same query stream timed
 through each ``repro.engine`` backend, batched, so the host cursor tier,
 the jnp device tier, and the fused Pallas kernel are directly comparable.
 
+Plus the paged-kernel **N-scaling sweep** (``--scaling``): corpora of
+growing compressed-stream length timed through each device engine at a
+fixed small page size, so the grid-blocked kernel's scaling curve (pages
+grow, per-instance VMEM does not) is tracked across PRs in
+``BENCH_intersection.json``.
+
   PYTHONPATH=src python -m benchmarks.run --only fig3
   PYTHONPATH=src python -m benchmarks.bench_intersection --engine host,jnp
 """
@@ -18,6 +24,7 @@ import numpy as np
 
 from repro.core import codecs as CD
 from repro.core import intersect as I
+from repro.core.jax_index import build_flat_index, build_paged_index
 from repro.core.repair import repair_compress
 from repro.core.sampling import build_a_sampling, build_b_sampling
 from repro.engine import DeviceEngine, make_engine, validate_engines
@@ -25,6 +32,50 @@ from repro.engine import DeviceEngine, make_engine, validate_engines
 from .common import corpus_lists, emit, time_us
 
 DEFAULT_ENGINES = ("host", "jnp")
+
+#: corpus-size axis for the N-scaling sweep (num_docs of the synthetic
+#: collection; vocab scales alongside so list count grows too)
+SCALING_DOCS = (250, 1000, 4000)
+SCALING_PAGE = 512
+
+
+def bench_scaling(engines=DEFAULT_ENGINES, n_queries=4096) -> list[dict]:
+    """Corpus-size sweep: batched next_geq throughput per engine as the
+    compressed stream grows past the page size (the regime the paged
+    kernel exists for)."""
+    rows = []
+    for nd in SCALING_DOCS:
+        lists, u = corpus_lists(num_docs=nd, vocab_size=2 * nd,
+                                mean_doc_len=120)
+        res = repair_compress(lists)
+        fi = build_flat_index(res)
+        pi = build_paged_index(fi, SCALING_PAGE)
+        rng = np.random.default_rng(0)
+        lids = rng.integers(0, len(lists), n_queries).astype(np.int32)
+        xs = rng.integers(0, u, n_queries).astype(np.int32)
+        for name in engines:
+            kwargs: dict = {}
+            if name == "jnp":
+                kwargs = dict(fi=fi, paged=True, page_size=SCALING_PAGE)
+            elif name == "pallas":
+                kwargs = dict(fi=fi, page_size=SCALING_PAGE)
+            eng = make_engine(name, res, **kwargs)
+            eng.next_geq_batch(lids, xs)     # warmup / jit compile
+            t0 = time.perf_counter()
+            eng.next_geq_batch(lids, xs)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "num_docs": nd,
+                "stream_symbols": int(fi.c.shape[0]),
+                "num_pages": pi.num_pages,
+                "engine": name,
+                "batch": n_queries,
+                "next_geq_qps": n_queries / dt,
+                "us_per_probe": 1e6 * dt / n_queries,
+            })
+    emit(rows, f"N-scaling sweep: batched next_geq throughput vs corpus "
+               f"size (page={SCALING_PAGE})")
+    return rows
 
 
 def _ratio_buckets(lists, rng, n_pairs):
@@ -128,9 +179,10 @@ def run(n_pairs=60, engines=DEFAULT_ENGINES) -> tuple[list[dict], list[dict]]:
     return rows, engine_rows
 
 
-def main(engines=DEFAULT_ENGINES) -> dict:
+def main(engines=DEFAULT_ENGINES, scaling: bool = True) -> dict:
     validate_engines(engines)  # before the (slow) host-method sweep
     rows, engine_rows = run(engines=engines)
+    scaling_rows = bench_scaling(engines) if scaling else []
     # The paper's algorithmic claim, in the machine-independent measure:
     # sampling cuts the symbols touched vs the unsampled skip scan.
     # (Wall-clock merge here is numpy's C loop vs our Python svs loops —
@@ -145,6 +197,7 @@ def main(engines=DEFAULT_ENGINES) -> dict:
     return {
         "host_methods": rows,
         "engines": engine_rows,
+        "scaling": scaling_rows,
         "throughput_qps": {
             name: float(np.mean([r["queries_per_s"] for r in engine_rows
                                  if r["engine"] == name]))
@@ -157,5 +210,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--engine", type=str, default=",".join(DEFAULT_ENGINES),
                     help="comma-separated backends: host,jnp,pallas")
+    ap.add_argument("--no-scaling", action="store_true",
+                    help="skip the corpus-size (N-scaling) sweep")
     args = ap.parse_args()
-    main(engines=tuple(args.engine.split(",")))
+    main(engines=tuple(args.engine.split(",")), scaling=not args.no_scaling)

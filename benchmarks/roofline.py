@@ -14,9 +14,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.batched import make_member, make_next_geq, make_pair_intersect
 from repro.core.jax_index import build_flat_index
 from repro.core.repair import repair_compress
+from repro.engine import jnp_backend as J
 
 from .common import corpus_lists, emit
 
@@ -32,20 +32,18 @@ def run() -> list[dict]:
     lids = jnp.asarray(rng.integers(0, len(lists), B), jnp.int32)
     xs = jnp.asarray(rng.integers(0, u, B), jnp.int32)
 
-    nd = make_next_geq(fi)
-    nd(lids, xs).block_until_ready()  # compile
+    J.next_geq_batch(fi, lids, xs).block_until_ready()  # compile
     t0 = time.perf_counter()
     for _ in range(20):
-        nd(lids, xs).block_until_ready()
+        J.next_geq_batch(fi, lids, xs).block_until_ready()
     dt = (time.perf_counter() - t0) / 20
     rows.append({"op": "next_geq", "batch": B,
                  "qps": B / dt, "us_per_query": dt / B * 1e6})
 
-    mb = make_member(fi)
-    mb(lids, xs).block_until_ready()
+    J.member_batch(fi, lids, xs).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(20):
-        mb(lids, xs).block_until_ready()
+        J.member_batch(fi, lids, xs).block_until_ready()
     dt = (time.perf_counter() - t0) / 20
     rows.append({"op": "member", "batch": B,
                  "qps": B / dt, "us_per_query": dt / B * 1e6})
@@ -56,11 +54,10 @@ def run() -> list[dict]:
     cand = [i for i in range(len(lists)) if len(lists[i]) <= short_cap]
     si = jnp.asarray(rng.choice(cand, BP), jnp.int32)
     li = jnp.asarray(rng.integers(0, len(lists), BP), jnp.int32)
-    pi = make_pair_intersect(fi, short_cap)
-    pi(si, li).block_until_ready()
+    J.pair_intersect(fi, si, li, short_cap).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(5):
-        pi(si, li).block_until_ready()
+        J.pair_intersect(fi, si, li, short_cap).block_until_ready()
     dt = (time.perf_counter() - t0) / 5
     rows.append({"op": "pair_intersect", "batch": BP,
                  "qps": BP / dt, "us_per_query": dt / BP * 1e6})

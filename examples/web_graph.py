@@ -14,9 +14,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.batched import make_expand
 from repro.core.jax_index import INT_INF, build_flat_index
 from repro.core.repair import repair_compress
+from repro.engine import jnp_backend as J
 from repro.models import gnn as G
 
 
@@ -53,8 +53,8 @@ def main() -> None:
     # --- decode on device to an edge index ---
     fi = build_flat_index(res)
     max_deg = max(len(a) for a in adj)
-    expand = make_expand(fi, max_deg)
-    mat = np.asarray(expand(jnp.arange(n, dtype=jnp.int32)))  # (n, max_deg)
+    mat = np.asarray(J.expand_batch(fi, jnp.arange(n, dtype=jnp.int32),
+                                    max_deg))                 # (n, max_deg)
     valid = mat != int(INT_INF)
     src = np.repeat(np.arange(n), valid.sum(1))
     dst = mat[valid]

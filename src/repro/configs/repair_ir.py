@@ -1,9 +1,10 @@
 """repair-ir — the paper's own "architecture": a batched conjunctive-query
 serving tier over the Re-Pair compressed inverted index (DESIGN.md §2).
 
-The device workload is the flattened query engine (core/batched.py): fixed
-trip-count next_geq / membership / pairwise-intersection over the int32
-grammar + C arrays.  Shapes follow a production search tier:
+The device workload is the flattened query engine
+(``repro.engine.jnp_backend`` and the paged ``list_intersect`` kernel):
+fixed trip-count next_geq / membership / pairwise-intersection over the
+int32 grammar + paged C arrays.  Shapes follow a production search tier:
 
 * ``serve_members``  — 1M (list, docid) membership probes per step,
 * ``serve_pairs``    — 64k pairwise list intersections (short expanded to
@@ -32,13 +33,15 @@ class RepairIRConfig:
     max_depth: int = 24              # §5.1: heights 15-25 -> static 24
     max_short_len: int = 256         # svs short-list expansion cap
     universe: int = 1 << 25          # document-id space
+    page_size: int = 2048            # paged-stream page (DESIGN.md §2.5)
 
 
 CONFIG = RepairIRConfig(name="repair-ir")
 
 SMOKE = RepairIRConfig(name="repair-ir-smoke", num_lists=64, c_len=4096,
                        num_symbols=1024, num_buckets=512, max_scan=8,
-                       max_depth=12, max_short_len=32, universe=4096)
+                       max_depth=12, max_short_len=32, universe=4096,
+                       page_size=512)
 
 REPAIR_SHAPES = (
     ShapeSpec("serve_members", "ir_members", {"batch": 1 << 20}),

@@ -1,8 +1,7 @@
 """Core of the reproduction: Re-Pair compression of inverted lists with
-skipping, sampling, and intersection — plus the TPU-facing flattened index
-(``jax_index``, a registered pytree).  The batched query programs live in
-``repro.engine`` (``core.batched`` is a deprecated shim over its jnp
-backend)."""
+skipping, sampling, and intersection — plus the TPU-facing flattened and
+paged device indexes (``jax_index``, registered pytrees).  The batched
+query programs live in ``repro.engine``."""
 
 from .repair import Grammar, RePairResult, repair_compress, lists_to_gap_stream
 from .dictionary import DictForest, build_forest, map_c_symbols

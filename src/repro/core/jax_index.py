@@ -28,6 +28,7 @@ bounds, and ``jax.tree.flatten`` / ``unflatten`` round-trip it losslessly.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -38,6 +39,11 @@ from .repair import RePairResult
 from .sampling import BSampling, build_b_sampling, _phrase_sums_for
 
 INT_INF = np.int32(2**31 - 1)
+
+#: Default stream page size (symbols per page).  Must be a multiple of the
+#: 128-lane width; overridable via REPRO_PAGE_SIZE so CI can force the
+#: multi-page (grid-blocked) kernel path on tiny corpora.
+DEFAULT_PAGE = int(os.environ.get("REPRO_PAGE_SIZE", "2048"))
 
 
 @jax.tree_util.register_dataclass
@@ -181,4 +187,79 @@ def build_flat_index(res: RePairResult, B: int = 8,
         max_depth=max(1, int(g.max_depth())),
         max_scan=max_scan,
         universe=int(res.universe),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedIndex:
+    """Paged view of a :class:`FlatIndex` (DESIGN.md §2.5).
+
+    The compressed stream is reshaped into fixed-size pages so device
+    consumers address ``(page, offset)`` instead of absolute stream
+    positions — per-instance VMEM in the grid-blocked kernel is then a
+    function of ``page_size`` and ``max_scan``, never of N.  Two paged
+    copies of C are kept (the same trade as the flat kernel operands):
+    dense symbol ids and pre-gathered phrase sums ``sym_sum[c]``.
+
+    * ``c_syms_pg, c_sums_pg`` — ``(num_pages, page_size)``, zero-padded
+      past N (padding is never selected: every in-kernel read is masked by
+      the list span);
+    * ``page_dir`` — ``(L+1,)`` per-list page directory: page of each
+      list's span start (``starts // page_size``); entry L is the page
+      one past the final list;
+    * ``bck_page, bck_off`` — the (b)-sampling bucket tables re-addressed
+      as (page, offset) of the anchor symbol (absolute position
+      ``bck_page * page_size + bck_off == starts[list] + bck_c_pos``).
+
+    Like ``FlatIndex`` it is a registered pytree: arrays are leaves,
+    ``page_size`` is static aux data (``num_pages`` is just
+    ``c_syms_pg.shape[0]``).  The flat index travels along as a nested
+    pytree so paged consumers still see the grammar, spans, and static
+    bounds.
+    """
+
+    flat: FlatIndex
+    c_syms_pg: jax.Array    # (num_pages, page_size) dense symbol ids
+    c_sums_pg: jax.Array    # (num_pages, page_size) phrase sums sym_sum[c]
+    page_dir: jax.Array     # (L+1,) first page of each list span
+    bck_page: jax.Array     # per-bucket anchor page
+    bck_off: jax.Array      # per-bucket offset within the page
+
+    page_size: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def num_pages(self) -> int:
+        return int(self.c_syms_pg.shape[0])
+
+
+def build_paged_index(fi: FlatIndex,
+                      page_size: int = DEFAULT_PAGE) -> PagedIndex:
+    """Reshape a flat index's stream into ``(num_pages, page_size)`` pages
+    and re-address the bucket tables as (page, offset).  Pure reshaping —
+    values are untouched, so paged and flat consumers agree bit-exactly."""
+    page_size = max(128, -(-page_size // 128) * 128)  # lane multiple
+    c = np.asarray(fi.c, dtype=np.int32)
+    sums = np.asarray(fi.sym_sum, dtype=np.int32)[c]
+    N = c.size
+    num_pages = max(1, -(-N // page_size))
+    pad = num_pages * page_size - N
+    c_pg = np.pad(c, (0, pad)).reshape(num_pages, page_size)
+    s_pg = np.pad(sums, (0, pad)).reshape(num_pages, page_size)
+
+    starts = np.asarray(fi.starts, dtype=np.int64)
+    boffs = np.asarray(fi.bucket_offsets, dtype=np.int64)
+    bpos = np.asarray(fi.bck_c_pos, dtype=np.int64)
+    # absolute anchor position of every bucket: span start + in-span offset
+    owner = np.repeat(np.arange(starts.size - 1), np.diff(boffs))
+    abs_pos = starts[owner] + bpos
+
+    return PagedIndex(
+        flat=fi,
+        c_syms_pg=jnp.asarray(c_pg),
+        c_sums_pg=jnp.asarray(s_pg),
+        page_dir=jnp.asarray((starts // page_size).astype(np.int32)),
+        bck_page=jnp.asarray((abs_pos // page_size).astype(np.int32)),
+        bck_off=jnp.asarray((abs_pos % page_size).astype(np.int32)),
+        page_size=page_size,
     )

@@ -125,6 +125,30 @@ def batch_spec(mesh: Mesh, ndim: int, batch: int | None = None) -> P:
     return P(lead, *([None] * (ndim - 1)))
 
 
+# -- Inverted-index rules ---------------------------------------------------------
+
+#: FlatIndex fields that replicate to every device: the Re-Pair grammar is
+#: the paper's "dictionary fits in RAM" structure — one level down it fits
+#: in VMEM, so every shard carries a full copy (DESIGN.md §2.5).
+INDEX_REPLICATED_FIELDS = ("sym_left", "sym_right", "sym_sum", "sym_len")
+
+
+def index_partition_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """List-partitioned layout for FlatIndex/PagedIndex pytrees (and their
+    stacked per-shard form): grammar tables replicated, everything that
+    scales with the corpus — compressed stream (``c`` flat or
+    ``c_*_pg`` paged), spans, page directory, (b)-sampling tables —
+    sharded on its leading dim across the data axes.  The paged stream
+    ``(num_pages, PAGE)`` therefore shards whole pages, never splitting a
+    page across devices."""
+    name = path.rsplit("/", 1)[-1]
+    dp = dp_axes(mesh)
+    if name in INDEX_REPLICATED_FIELDS or not dp:
+        return P(*([None] * len(shape)))
+    lead: Any = dp if len(dp) > 1 else dp[0]
+    return P(lead, *([None] * (len(shape) - 1)))
+
+
 # -- GNN rules -------------------------------------------------------------------
 
 def gnn_param_spec(path: str, shape: tuple[int, ...], mesh: Mesh) -> P:

@@ -5,26 +5,159 @@ short side, (short, long) normalization, candidate thinning for k-term
 queries, host fallback for degenerate pairs — and delegates exactly one
 primitive to the concrete backend: the batched next_geq probe.  JnpEngine
 implements it with the vmapped fixed-trip-count program
-(``engine/jnp_backend.py``); PallasEngine with the fused ``list_intersect``
-kernel.  Both are therefore interchangeable anywhere, and must agree
-bit-exactly.
+(``engine/jnp_backend.py``, flat or paged addressing); PallasEngine with
+the grid-blocked ``list_intersect`` kernel.  Both are therefore
+interchangeable anywhere, and must agree bit-exactly.
+
+Pair routing is vectorized: (short, long) normalization and the
+device/host outlier split are numpy index arithmetic over the whole batch,
+not a per-pair Python loop.
+
+**Sharded dispatch** (DESIGN.md §2.5): construct a device engine with a
+``mesh`` carrying a ``data`` axis and ``next_geq_batch`` runs under
+``shard_map`` — the grammar tables are replicated to every device, the
+compressed stream + spans + (b)-sampling are list-partitioned into
+contiguous shards balanced by stream length (``shard_flat_index``), each
+device answers the queries whose list it owns, and a ``pmax`` across the
+axis assembles the batch (every list has exactly one owner; non-owners
+emit -1).
 """
 
 from __future__ import annotations
 
 import abc
+import functools
 from typing import Sequence
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
 
-from ..core.jax_index import FlatIndex, INT_INF, build_flat_index
+from ..core.jax_index import (FlatIndex, PagedIndex, build_flat_index,
+                              build_paged_index, DEFAULT_PAGE)
 from ..core.repair import RePairResult
+from ..distributed.sharding import index_partition_spec
 from .base import Engine
 from .host import HostEngine
 from . import jnp_backend as J
+
+
+def shard_flat_index(fi: FlatIndex, num_shards: int
+                     ) -> tuple[dict, np.ndarray, np.ndarray]:
+    """List-partition a flat index into ``num_shards`` contiguous shards
+    balanced by compressed-stream length.
+
+    Returns ``(stacked, shard_of_list, local_lid)``: ``stacked`` maps field
+    name -> (num_shards, ...) array (per-shard spans rebased to the shard's
+    local stream, everything padded to the widest shard so the stack is
+    rectangular), and the two (L,) routing tables give each global list its
+    owning shard and its index within it.  Grammar tables are NOT here —
+    they replicate (DESIGN.md §2.5)."""
+    starts = np.asarray(fi.starts, np.int64)
+    L = starts.size - 1
+    N = int(starts[-1])
+    c = np.asarray(fi.c, np.int64)
+    boffs = np.asarray(fi.bucket_offsets, np.int64)
+    bpos = np.asarray(fi.bck_c_pos, np.int64)
+    babs = np.asarray(fi.bck_abs, np.int64)
+    per_list = {k: np.asarray(getattr(fi, k), np.int64)
+                for k in ("firsts", "lasts", "lengths", "kbits")}
+
+    # contiguous list boundaries closest to equal stream slices
+    targets = (np.arange(num_shards + 1) * N) // max(num_shards, 1)
+    lb = np.searchsorted(starts, targets, side="left")
+    lb[0], lb[-1] = 0, L
+    lb = np.maximum.accumulate(lb)
+
+    shard_of_list = np.repeat(np.arange(num_shards), np.diff(lb))
+    local_lid = np.arange(L) - lb[shard_of_list]
+
+    l_max = max(1, int(np.diff(lb).max(initial=0)))
+    n_max = max(1, int((starts[lb[1:]] - starts[lb[:-1]]).max(initial=0)))
+    nb_max = max(1, int((boffs[lb[1:]] - boffs[lb[:-1]]).max(initial=0)))
+
+    def blank(fill, *shape):
+        return np.full((num_shards, *shape), fill, dtype=np.int64)
+
+    out = {"c": blank(0, n_max), "starts": blank(0, l_max + 1),
+           "bucket_offsets": blank(0, l_max + 1),
+           "bck_c_pos": blank(0, nb_max), "bck_abs": blank(0, nb_max),
+           "firsts": blank(0, l_max), "lasts": blank(-1, l_max),
+           "lengths": blank(0, l_max), "kbits": blank(1, l_max)}
+    for d in range(num_shards):
+        a, b = lb[d], lb[d + 1]
+        c0, c1 = starts[a], starts[b]
+        out["c"][d, : c1 - c0] = c[c0:c1]
+        loc = starts[a : b + 1] - c0
+        out["starts"][d, : b - a + 1] = loc
+        out["starts"][d, b - a + 1 :] = loc[-1]
+        o0, o1 = boffs[a], boffs[b]
+        ob = boffs[a : b + 1] - o0
+        out["bucket_offsets"][d, : b - a + 1] = ob
+        out["bucket_offsets"][d, b - a + 1 :] = ob[-1]
+        out["bck_c_pos"][d, : o1 - o0] = bpos[o0:o1]
+        out["bck_abs"][d, : o1 - o0] = babs[o0:o1]
+        for k, v in per_list.items():
+            out[k][d, : b - a] = v[a:b]
+    stacked = {k: v.astype(np.int32) for k, v in out.items()}
+    return stacked, shard_of_list.astype(np.int32), local_lid.astype(np.int32)
+
+
+_STACKED_FIELDS = ("c", "starts", "bucket_offsets", "bck_c_pos", "bck_abs",
+                   "firsts", "lasts", "lengths", "kbits")
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_dispatch(mesh: Mesh, axis: str, statics: tuple):
+    """One jitted shard_map program per (mesh, static bounds): the index
+    arrays are traced ARGUMENTS, not closure captures, so rebuilding the
+    index (same bounds, same shapes) hits the same executable — the
+    §2.3 no-retrace-on-rebuild rule extends to the sharded path."""
+    bounds = dict(statics)
+    rep = P(None)
+    specs = {k: index_partition_spec(k, (1, 1), mesh)
+             for k in _STACKED_FIELDS}
+
+    def local_next_geq(stk, gram, sof, llid, gids, xs):
+        stk = {k: v[0] for k, v in stk.items()}  # this shard's block
+        local_fi = FlatIndex(**gram, **stk, **bounds)
+        mine = sof[gids] == jax.lax.axis_index(axis)
+        vals = J.next_geq_batch(local_fi, jnp.where(mine, llid[gids], 0), xs)
+        # every list has exactly one owner; losers emit -1 and pmax
+        # assembles the replicated answer
+        return jax.lax.pmax(jnp.where(mine, vals, -1), axis)
+
+    return jax.jit(shard_map(
+        local_next_geq, mesh=mesh,
+        in_specs=(specs, rep, rep, rep, rep, rep),
+        out_specs=rep, check_rep=False))
+
+
+def make_sharded_next_geq(fi: FlatIndex, mesh: Mesh, axis: str = "data"):
+    """Bind one flat index to the shard_map dispatch for
+    ``next_geq_batch`` over a ``data`` mesh axis: replicated grammar,
+    list-partitioned stream/spans (specs from
+    ``distributed.sharding.index_partition_spec``)."""
+    num_shards = mesh.shape[axis]
+    stacked, shard_of_list, local_lid = shard_flat_index(fi, num_shards)
+    stacked = {k: jnp.asarray(v) for k, v in stacked.items()}
+    grammar = {k: getattr(fi, k)
+               for k in ("sym_left", "sym_right", "sym_sum", "sym_len")}
+    shard_of_list = jnp.asarray(shard_of_list)
+    local_lid = jnp.asarray(local_lid)
+    statics = (("num_terminals", fi.num_terminals),
+               ("max_depth", fi.max_depth), ("max_scan", fi.max_scan),
+               ("universe", fi.universe))
+    dispatch = _sharded_dispatch(mesh, axis, statics)
+
+    def call(gids, xs):
+        return dispatch(stacked, grammar, shard_of_list, local_lid,
+                        gids, xs)
+
+    return call
 
 
 class DeviceEngine(Engine):
@@ -33,16 +166,24 @@ class DeviceEngine(Engine):
     ``max_short_len`` is the static expansion cap of the device program:
     pairs (or k-term queries) whose *shortest* list exceeds it route to the
     host fallback engine, exactly like a real serving tier routes outliers.
+    ``mesh`` (with a ``data`` axis) switches ``next_geq_batch`` to the
+    shard_map dispatch path.
     """
 
     def __init__(self, res: RePairResult, fi: FlatIndex | None = None,
                  max_short_len: int = 256, B: int = 8,
-                 fallback: Engine | None = None):
+                 fallback: Engine | None = None,
+                 mesh: Mesh | None = None, mesh_axis: str = "data"):
         super().__init__(res)
         self.fi = fi if fi is not None else build_flat_index(res, B=B)
         self.max_short_len = max_short_len
         self._B = B
         self._fallback = fallback
+        self.mesh = mesh
+        self._sharded_next_geq = None
+        if mesh is not None and mesh_axis in mesh.axis_names:
+            self._sharded_next_geq = make_sharded_next_geq(
+                self.fi, mesh, mesh_axis)
 
     @property
     def fallback(self) -> Engine:
@@ -58,44 +199,51 @@ class DeviceEngine(Engine):
     # -- the one backend-specific primitive --------------------------------
 
     @abc.abstractmethod
-    def _next_geq_dev(self, list_ids: jax.Array, xs: jax.Array) -> jax.Array:
-        """(Q,) ids × (Q,) probes -> (Q,) int32 device array."""
+    def _next_geq_dev(self, list_ids, xs):
+        """(Q,) ids × (Q,) probes -> (Q,) int32 array.  Takes numpy or
+        device arrays; the backend owns any transfer (the pallas backend
+        routes pages on the host first, so handing it numpy avoids a
+        device round-trip)."""
 
     @abc.abstractmethod
-    def _probe_dev(self, long_ids: jax.Array, xs: jax.Array) -> jax.Array:
-        """(B,) ids × (B, M) probes -> (B, M) int32 device array."""
+    def _probe_dev(self, long_ids, xs):
+        """(B,) ids × (B, M) probes -> (B, M) int32 array."""
 
     # -- engine API ---------------------------------------------------------
 
     def next_geq_batch(self, list_ids: np.ndarray,
                        xs: np.ndarray) -> np.ndarray:
-        return np.asarray(self._next_geq_dev(
-            jnp.asarray(list_ids, jnp.int32), jnp.asarray(xs, jnp.int32)))
+        lids = np.asarray(list_ids, np.int32)
+        xq = np.asarray(xs, np.int32)
+        if self._sharded_next_geq is not None:
+            return np.asarray(self._sharded_next_geq(lids, xq))
+        return np.asarray(self._next_geq_dev(lids, xq))
 
     def intersect_pairs(self, pairs: Sequence[tuple[int, int]]
                         ) -> list[np.ndarray]:
-        shorts: list[int] = []
-        longs: list[int] = []
-        order: list[int] = []
-        host_route: list[tuple[int, int, int]] = []
-        for qi, (a, b) in enumerate(pairs):
-            a, b = self.order_by_length([a, b])
-            if self.lengths[a] > self.max_short_len:
-                host_route.append((qi, a, b))
-            else:
-                order.append(qi)
-                shorts.append(a)
-                longs.append(b)
-        out: list[np.ndarray | None] = [None] * len(pairs)
-        if shorts:
-            mat = J.expand_batch(self.fi, jnp.asarray(shorts, jnp.int32),
+        if not len(pairs):
+            return []
+        arr = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+        plen = self.lengths[arr]
+        swap = plen[:, 0] > plen[:, 1]  # strict: ties keep request order
+        shorts = np.where(swap, arr[:, 1], arr[:, 0])
+        longs = np.where(swap, arr[:, 0], arr[:, 1])
+        to_host = self.lengths[shorts] > self.max_short_len
+        out: list[np.ndarray | None] = [None] * arr.shape[0]
+        dev = np.flatnonzero(~to_host)
+        if dev.size:
+            mat = J.expand_batch(self.fi, jnp.asarray(shorts[dev], jnp.int32),
                                  self.max_short_len)
-            vals = self._probe_dev(jnp.asarray(longs, jnp.int32), mat)
+            vals = self._probe_dev(jnp.asarray(longs[dev], jnp.int32), mat)
             kept = np.asarray(J.match_mask(vals, mat))
-            for qi, row in zip(order, kept):
+            for qi, row in zip(dev, kept):
                 out[qi] = self.compact(row)
-        for qi, a, b in host_route:     # outlier route: host svs
-            out[qi] = self.fallback.intersect_pairs([(a, b)])[0]
+        host = np.flatnonzero(to_host)
+        if host.size:                   # outlier route: host svs, one batch
+            host_outs = self.fallback.intersect_pairs(
+                list(zip(shorts[host].tolist(), longs[host].tolist())))
+            for qi, o in zip(host, host_outs):
+                out[qi] = o
         return out  # type: ignore[return-value]
 
     def intersect_multi(self, idxs: Sequence[int]) -> np.ndarray:
@@ -119,12 +267,27 @@ class DeviceEngine(Engine):
 
 class JnpEngine(DeviceEngine):
     """Fixed-trip-count vmapped jnp programs (the kernel's bit-exact
-    reference)."""
+    reference).  ``paged=True`` routes probes through the paged-addressing
+    mirror over a :class:`PagedIndex` — same values, page-local reads."""
 
     name = "jnp"
 
+    def __init__(self, res: RePairResult, fi: FlatIndex | None = None,
+                 max_short_len: int = 256, B: int = 8,
+                 fallback: Engine | None = None, paged: bool = False,
+                 page_size: int = DEFAULT_PAGE,
+                 pi: PagedIndex | None = None, **kwargs):
+        super().__init__(res, fi=fi, max_short_len=max_short_len, B=B,
+                         fallback=fallback, **kwargs)
+        self.pi = pi if pi is not None else (
+            build_paged_index(self.fi, page_size) if paged else None)
+
     def _next_geq_dev(self, list_ids: jax.Array, xs: jax.Array) -> jax.Array:
+        if self.pi is not None:
+            return J.next_geq_batch_paged(self.pi, list_ids, xs)
         return J.next_geq_batch(self.fi, list_ids, xs)
 
     def _probe_dev(self, long_ids: jax.Array, xs: jax.Array) -> jax.Array:
+        if self.pi is not None:
+            return J.probe_batch_paged(self.pi, long_ids, xs)
         return J.probe_batch(self.fi, long_ids, xs)

@@ -24,7 +24,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..core.jax_index import FlatIndex, INT_INF
+from ..core.jax_index import FlatIndex, PagedIndex, INT_INF
 
 
 def _next_geq_one(fi: FlatIndex, list_id: jax.Array, x: jax.Array) -> jax.Array:
@@ -93,6 +93,97 @@ def next_geq_batch(fi: FlatIndex, list_ids: jax.Array,
                    xs: jax.Array) -> jax.Array:
     """(Q,) list ids × (Q,) probes -> (Q,) smallest element >= x (INT_INF)."""
     return jax.vmap(partial(_next_geq_one, fi))(list_ids, xs)
+
+
+def _next_geq_one_paged(pi: PagedIndex, list_id: jax.Array,
+                        x: jax.Array) -> jax.Array:
+    """Paged-addressing mirror of :func:`_next_geq_one` (DESIGN.md §2.5):
+    the bucket tables hand out (page, offset) anchors and every stream read
+    goes through ``c_*_pg[pos // PAGE, pos % PAGE]``.  Same arithmetic on
+    the same values as the flat program, so the two agree bit-exactly —
+    this is the reference the grid-blocked Pallas kernel is checked
+    against."""
+    fl = pi.flat
+    T = fl.num_terminals
+    PAGE = pi.page_size
+    npg = pi.c_syms_pg.shape[0]
+
+    start = fl.starts[list_id]
+    end = fl.starts[list_id + 1]
+    first = fl.firsts[list_id]
+    last = fl.lasts[list_id]
+
+    # bucket lookup in (page, offset) form
+    b = jax.lax.shift_right_logical(x, fl.kbits[list_id])
+    boff = fl.bucket_offsets[list_id]
+    bnum = fl.bucket_offsets[list_id + 1] - boff
+    b = jnp.minimum(b, bnum - 1)
+    pos = pi.bck_page[boff + b] * PAGE + pi.bck_off[boff + b]
+    s = fl.bck_abs[boff + b]
+    pos = jnp.where(x <= first, start, pos)
+    s = jnp.where(x <= first, first, s)
+
+    def page_read(table, p):
+        return table[jnp.minimum(p // PAGE, npg - 1), p % PAGE]
+
+    # phrase-sum skipping over paged reads
+    def scan_body(_, ps_state):
+        pos, s = ps_state
+        in_range = pos < end
+        ps = jnp.where(in_range, page_read(pi.c_sums_pg, pos), 0)
+        take = in_range & (s + ps < x)
+        return (pos + jnp.where(take, 1, 0), s + jnp.where(take, ps, 0))
+
+    pos, s = jax.lax.fori_loop(0, fl.max_scan, scan_body, (pos, s))
+    done_early = s >= x
+    past_end = pos >= end
+
+    # fixed-depth descent inside the halting phrase
+    sym0 = page_read(pi.c_syms_pg, jnp.minimum(pos, npg * PAGE - 1))
+
+    def descend_body(_, state):
+        sym, s = state
+        is_rule = sym >= T
+        l = jnp.where(is_rule, fl.sym_left[sym], sym)
+        r = jnp.where(is_rule, fl.sym_right[sym], sym)
+        ls = fl.sym_sum[l]
+        go_left = s + ls >= x
+        new_sym = jnp.where(go_left, l, r)
+        new_s = jnp.where(go_left, s, s + ls)
+        return (jnp.where(is_rule, new_sym, sym),
+                jnp.where(is_rule, new_s, s))
+
+    sym_f, s_f = jax.lax.fori_loop(0, fl.max_depth, descend_body, (sym0, s))
+    answer = s_f + fl.sym_sum[sym_f]
+
+    out = jnp.where(done_early, s, answer)
+    out = jnp.where(past_end & ~done_early, INT_INF, out)
+    out = jnp.where(x > last, INT_INF, out)
+    return out.astype(jnp.int32)
+
+
+@jax.jit
+def next_geq_batch_paged(pi: PagedIndex, list_ids: jax.Array,
+                         xs: jax.Array) -> jax.Array:
+    """Paged twin of :func:`next_geq_batch` — bit-exact vs the flat path."""
+    return jax.vmap(partial(_next_geq_one_paged, pi))(list_ids, xs)
+
+
+@jax.jit
+def member_batch_paged(pi: PagedIndex, list_ids: jax.Array,
+                       xs: jax.Array) -> jax.Array:
+    return next_geq_batch_paged(pi, list_ids, xs) == xs
+
+
+@jax.jit
+def probe_batch_paged(pi: PagedIndex, long_ids: jax.Array,
+                      xs: jax.Array) -> jax.Array:
+    """Row-wise paged next_geq: (B,) ids × (B, M) probes -> (B, M)."""
+
+    def one(lid, row):
+        return jax.vmap(lambda x: _next_geq_one_paged(pi, lid, x))(row)
+
+    return jax.vmap(one)(long_ids, xs)
 
 
 @jax.jit

@@ -1,11 +1,15 @@
-"""PallasEngine: the fused ``list_intersect`` kernel behind the engine API.
+"""PallasEngine: the grid-blocked ``list_intersect`` kernel behind the
+engine API.
 
-The whole hot path — bucket lookup, phrase-sum skipping, fixed-depth
-grammar descent — runs in ONE ``pallas_call`` per probe batch
-(``kernels/list_intersect``); expansion of the short side reuses the jnp
-positional-descent program (it is outside the per-probe critical path).
-The lane-padded kernel operands are computed once at construction and
-reused for every launch, so per-batch work is the kernel alone.
+The device hot path — phrase-sum skipping + fixed-depth grammar descent —
+runs in ONE ``pallas_call`` per probe batch over the **paged** stream
+layout (``kernels/list_intersect``, DESIGN.md §2.5): the host half of the
+path (page routing: bucket lookup, anchor-page sort, per-tile base pages
+for the scalar-prefetch BlockSpec) is numpy, the device half never holds
+more than one stream page per kernel instance.  Expansion of the short
+side reuses the jnp positional-descent program (it is outside the
+per-probe critical path).  The paged index and lane-padded kernel operands
+are computed once at construction and reused for every launch.
 
 ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere —
 the same convention as the other kernels' ops wrappers.
@@ -13,10 +17,10 @@ the same convention as the other kernels' ops wrappers.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from ..core.jax_index import FlatIndex
+from ..core.jax_index import (FlatIndex, PagedIndex, build_paged_index,
+                              DEFAULT_PAGE)
 from ..core.repair import RePairResult
 from ..kernels import should_interpret
 from ..kernels.list_intersect import ops as K
@@ -30,18 +34,25 @@ class PallasEngine(DeviceEngine):
     def __init__(self, res: RePairResult, fi: FlatIndex | None = None,
                  max_short_len: int = 256, B: int = 8,
                  fallback: Engine | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 page_size: int = DEFAULT_PAGE,
+                 pi: PagedIndex | None = None, **kwargs):
         super().__init__(res, fi=fi, max_short_len=max_short_len, B=B,
-                         fallback=fallback)
+                         fallback=fallback, **kwargs)
         self.interpret = (should_interpret() if interpret is None
                           else interpret)
-        self._tables, self._statics = K.pad_index_operands(self.fi)
+        self.pi = pi if pi is not None else build_paged_index(self.fi,
+                                                              page_size)
+        self._tables, self._statics, self._host = K.pad_paged_operands(
+            self.pi)
 
-    def _next_geq_dev(self, list_ids: jax.Array, xs: jax.Array) -> jax.Array:
-        return K.next_geq_padded(self._tables, list_ids, xs,
-                                 interpret=self.interpret, **self._statics)
+    def _next_geq_dev(self, list_ids, xs) -> np.ndarray:
+        return K.next_geq_paged(self._tables, self._host,
+                                np.asarray(list_ids), np.asarray(xs),
+                                interpret=self.interpret, **self._statics)
 
-    def _probe_dev(self, long_ids: jax.Array, xs: jax.Array) -> jax.Array:
-        B, M = xs.shape
-        flat_ids = jnp.repeat(long_ids.astype(jnp.int32), M)
-        return self._next_geq_dev(flat_ids, xs.reshape(-1)).reshape(B, M)
+    def _probe_dev(self, long_ids, xs) -> np.ndarray:
+        B, M = np.shape(xs)
+        flat_ids = np.repeat(np.asarray(long_ids, np.int32), M)
+        return self._next_geq_dev(
+            flat_ids, np.asarray(xs).reshape(-1)).reshape(B, M)

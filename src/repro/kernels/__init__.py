@@ -11,9 +11,11 @@ ref.py oracle):
                         adaptation of [ST07] lookup: aligned buckets of two
                         lists intersect bucket-locally in VMEM).
 * ``bitmap_and``      — word-wise AND + popcount for the [MC07] hybrid.
-* ``list_intersect``  — the FUSED query path: bucket lookup + phrase-sum
-                        skipping + fixed-depth grammar descent in one
-                        pallas_call; backs ``repro.engine.PallasEngine``
+* ``list_intersect``  — the FUSED query path: phrase-sum skipping +
+                        fixed-depth grammar descent in one grid-blocked
+                        pallas_call over the PAGED stream (scalar-prefetch
+                        page scheduling, one stream page per instance —
+                        DESIGN.md §2.5); backs ``repro.engine.PallasEngine``
                         and is checked bit-exactly against the jnp engine.
 
 All validated on CPU with interpret=True against their refs; BlockSpecs are

@@ -1,32 +1,40 @@
-"""Pallas TPU kernel: fused next_geq over Re-Pair compressed lists.
+"""Pallas TPU kernel: grid-blocked fused next_geq over paged Re-Pair lists.
 
-The full query-time operation of the paper (§3.2–3.3) in ONE kernel —
-previously split between host cursors and vmapped jnp — so the descent
-loop never leaves the core:
+The query-time operation of the paper (§3.2–3.3) over the **paged** stream
+layout (DESIGN.md §2.5).  The compressed stream lives in HBM as fixed-size
+pages ``(num_pages, PAGE)``; each kernel instance sees exactly ONE page of
+it, so per-instance VMEM is a function of ``PAGE`` and ``max_scan`` — never
+of N.  The grid is ``(num_query_tiles, K)``:
 
-  1. **bucket lookup**: direct domain addressing into the flattened
-     (b)-sampling tables ([ST07]) gives a start state (symbol offset j,
-     absolute value s);
-  2. **phrase-sum skipping**: a ``max_scan``-trip masked loop advances
-     whole phrases while ``s + sum < x`` (§3.2);
-  3. **fixed-depth grammar descent**: ``max_depth`` left/right steps by
-     partial sums resolve the answer inside the phrase (Theorem 1).
+* axis 0 — tiles of TILE_Q queries, pre-sorted by anchor page (the ops
+  wrapper does the page routing on the host from the per-list page
+  directory + (page, offset) bucket tables);
+* axis 1 — the K consecutive stream pages the tile's skip windows can
+  touch, DMA'd one per step via ``PrefetchScalarGridSpec`` scalar prefetch:
+  the per-tile base page ``tile_base[i]`` drives the BlockSpec index_map,
+  so only pages ``[tile_base[i], tile_base[i] + K)`` ever enter VMEM.
 
-Each kernel instance handles TILE_Q queries vectorized across lanes; every
-lane runs the same fixed-trip instruction stream (the bounds are static
-properties of the index).  Grammar + bucket + stream tables are broadcast
-whole into VMEM; table lookups use masked-sum one-hot gathers (same idiom
-as ``grammar_expand``) because arbitrary dynamic gathers from VMEM do not
-vectorize on the TPU — exact in int32.
+Each query lane runs a resumable state machine carried in VMEM scratch
+across the K page steps (the TPU grid iterates the trailing axis
+innermost, so scratch written at step (i, k) is live at (i, k+1)):
 
-The compressed stream is passed twice, pre-gathered on the host side of the
-pallas_call: ``c_syms`` (dense symbol ids) and ``c_sums`` (per-position
-phrase sums, ``sym_sum[c]``) — trading one VMEM copy of C for removing a
-double gather from the skipping loop's critical path.
+  1. **start state** (symbol position ``pos``, absolute value ``s``) comes
+     in precomputed from the (b)-sampling bucket tables — the same lookup
+     the page router already performed; degenerate lanes (head hit,
+     ``x > last``, empty suffix) finalize at k == 0 without touching any
+     page;
+  2. **phrase-sum skipping** (§3.2) advances ``pos`` while
+     ``s + sum < x``, masked to the current page — a lane that runs off
+     the page edge resumes on the next grid step when its page arrives;
+  3. **fixed-depth grammar descent** (Theorem 1) fires on the step where
+     the lane halts inside the resident page; grammar tables are broadcast
+     whole (the paper's "dictionary fits in RAM", one level down) since
+     they are O(S), not O(N).
 
-VMEM budget per step: the widest one-hot compare is (TILE_Q, N_pad) int32 —
-128 × N lanes; for C beyond ~64K symbols the stream must be grid-blocked
-(future work, DESIGN.md §2.5); at the repo's corpus scales it fits whole.
+Table lookups use masked-sum one-hot gathers (same idiom as
+``grammar_expand``) because arbitrary dynamic gathers from VMEM do not
+vectorize on the TPU — exact in int32.  The widest stream-side compare is
+(TILE_Q, PAGE); the old (TILE_Q, N) full-stream broadcast is gone.
 """
 
 from __future__ import annotations
@@ -34,6 +42,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 TILE_Q = 128
 INT_INF = 2**31 - 1  # plain int: jnp array constants can't be captured
@@ -47,54 +56,73 @@ def _gather(table: jax.Array, idx: jax.Array, width: int) -> jax.Array:
     return jnp.sum(jnp.where(onehot, table[None, :], 0), axis=1)
 
 
-def _list_intersect_kernel(lids_ref, xs_ref, starts_ref, firsts_ref,
-                           lasts_ref, kbits_ref, boffs_ref, bpos_ref,
-                           babs_ref, csyms_ref, csums_ref, sleft_ref,
-                           sright_ref, ssum_ref, out_ref, *,
-                           max_scan: int, max_depth: int, T: int, N: int,
-                           l1_pad: int, l_pad: int, nb_pad: int,
-                           n_pad: int, s_pad: int):
+def _paged_intersect_kernel(base_ref, lids_ref, xs_ref, pos0_ref, s0_ref,
+                            starts_ref, lasts_ref, sleft_ref, sright_ref,
+                            ssum_ref, csyms_ref, csums_ref, out_ref,
+                            pos_sc, s_sc, val_sc, done_sc, *,
+                            max_scan: int, max_depth: int, T: int,
+                            page: int, k_pages: int,
+                            l1_pad: int, l_pad: int, s_pad: int):
+    i = pl.program_id(0)
+    k = pl.program_id(1)
     lid = lids_ref[0, :]                       # (TILE_Q,)
     x = xs_ref[0, :]
-    starts = starts_ref[0, :]
-    boffs = boffs_ref[0, :]
+    end = _gather(starts_ref[0, :], lid + 1, l1_pad)
 
-    start = _gather(starts, lid, l1_pad)
-    end = _gather(starts, lid + 1, l1_pad)
-    first = _gather(firsts_ref[0, :], lid, l_pad)
-    last = _gather(lasts_ref[0, :], lid, l_pad)
-    kbit = _gather(kbits_ref[0, :], lid, l_pad)
+    @pl.when(k == 0)
+    def _init():
+        pos = pos0_ref[0, :]
+        s = s0_ref[0, :]
+        last = _gather(lasts_ref[0, :], lid, l_pad)
+        # lanes that need no page data settle immediately: the start state
+        # already answers (s >= x, covers the head case), the suffix is
+        # empty (pos >= end), or x exceeds the list entirely.
+        done_early = s >= x
+        done = done_early | (pos >= end) | (x > last)
+        val = jnp.where(done_early, s, INT_INF)
+        val = jnp.where(x > last, INT_INF, val)
+        pos_sc[0, :] = pos
+        s_sc[0, :] = s
+        val_sc[0, :] = jnp.where(done, val, INT_INF)
+        done_sc[0, :] = done.astype(jnp.int32)
 
-    # -- 1. bucket lookup ---------------------------------------------------
-    boff = _gather(boffs, lid, l1_pad)
-    bnum = _gather(boffs, lid + 1, l1_pad) - boff
-    b = jnp.minimum(jax.lax.shift_right_logical(x, kbit), bnum - 1)
-    j = _gather(bpos_ref[0, :], boff + b, nb_pad)
-    s = _gather(babs_ref[0, :], boff + b, nb_pad)
-    head = x <= first
-    j = jnp.where(head, 0, j)
-    s = jnp.where(head, first, s)
+    cur = base_ref[i] + k                      # resident page id
+    pos = pos_sc[0, :]
+    s = s_sc[0, :]
+    done = done_sc[0, :] != 0
+    anchor = pos0_ref[0, :]
+    csums = csums_ref[0, :]                    # (PAGE,) resident page
+    csyms = csyms_ref[0, :]
 
-    # -- 2. phrase-sum skipping --------------------------------------------
-    csums = csums_ref[0, :]
+    # -- phrase-sum skipping, masked to the resident page ------------------
+    # total advancement is capped at max_scan from the anchor — the same
+    # trip budget as the flat reference, and what bounds the page router's
+    # window to (anchor + max_scan) // PAGE.
+    def scan_body(_, ps_state):
+        pos, s = ps_state
+        off = pos - cur * page
+        in_page = (off >= 0) & (off < page)
+        ps = _gather(csums, jnp.where(in_page, off, -1), page)
+        take = (~done & in_page & (pos < end) & (pos - anchor < max_scan)
+                & (s + ps < x))
+        return (pos + jnp.where(take, 1, 0), s + jnp.where(take, ps, 0))
 
-    def scan_body(_, js):
-        j, s = js
-        in_range = start + j < end
-        ps = _gather(csums, jnp.minimum(start + j, N - 1), n_pad)
-        ps = jnp.where(in_range, ps, 0)
-        take = in_range & (s + ps < x)
-        return (j + jnp.where(take, 1, 0), s + jnp.where(take, ps, 0))
+    pos, s = jax.lax.fori_loop(0, min(max_scan, page), scan_body, (pos, s))
 
-    j, s = jax.lax.fori_loop(0, max_scan, scan_body, (j, s))
+    # a lane is settled by this page iff it halted inside it (the skip
+    # window can straddle pages: a lane parked on the page edge resumes
+    # next step) or ran out of list.
+    off = pos - cur * page
+    in_page = (off >= 0) & (off < page)
+    past_end = pos >= end
+    newly = ~done & (in_page | past_end)
     done_early = s >= x
-    past_end = start + j >= end
 
-    # -- 3. fixed-depth grammar descent ------------------------------------
+    # -- fixed-depth grammar descent inside the resident page --------------
     sleft = sleft_ref[0, :]
     sright = sright_ref[0, :]
     ssum = ssum_ref[0, :]
-    sym0 = _gather(csyms_ref[0, :], jnp.minimum(start + j, N - 1), n_pad)
+    sym0 = _gather(csyms, jnp.where(in_page, off, -1), page)
 
     def descend_body(_, state):
         sym, s = state
@@ -111,41 +139,60 @@ def _list_intersect_kernel(lids_ref, xs_ref, starts_ref, firsts_ref,
     sym_f, s_f = jax.lax.fori_loop(0, max_depth, descend_body, (sym0, s))
     answer = s_f + _gather(ssum, sym_f, s_pad)
 
-    out = jnp.where(done_early, s, answer)
-    out = jnp.where(past_end & ~done_early, INT_INF, out)
-    out = jnp.where(x > last, INT_INF, out)
-    out_ref[0, :] = out
+    val = jnp.where(done_early, s, answer)
+    val = jnp.where(past_end & ~done_early, INT_INF, val)
+    val_sc[0, :] = jnp.where(newly, val, val_sc[0, :])
+    done_sc[0, :] = (done | newly).astype(jnp.int32)
+    pos_sc[0, :] = pos
+    s_sc[0, :] = s
+
+    @pl.when(k == k_pages - 1)
+    def _flush():
+        out_ref[0, :] = val_sc[0, :]
 
 
-def list_intersect_pallas(lids: jax.Array, xs: jax.Array,
-                          starts: jax.Array, firsts: jax.Array,
-                          lasts: jax.Array, kbits: jax.Array,
-                          boffs: jax.Array, bpos: jax.Array, babs: jax.Array,
-                          csyms: jax.Array, csums: jax.Array,
-                          sleft: jax.Array, sright: jax.Array,
-                          ssum: jax.Array, *, max_scan: int, max_depth: int,
-                          T: int, N: int,
-                          interpret: bool = False) -> jax.Array:
-    """lids, xs (Q,) int32, Q % TILE_Q == 0; tables 1-D int32 (padded to
-    lane multiples by the ops wrapper).  Returns (Q,) int32 next_geq values
-    (INT_INF past the end), bit-exact vs engine.jnp_backend.next_geq_batch.
-    ``N`` is the true (unpadded) length of C for index clamping."""
+def paged_intersect_pallas(tile_base: jax.Array, lids: jax.Array,
+                           xs: jax.Array, pos0: jax.Array, s0: jax.Array,
+                           starts: jax.Array, lasts: jax.Array,
+                           sleft: jax.Array, sright: jax.Array,
+                           ssum: jax.Array, csyms_pg: jax.Array,
+                           csums_pg: jax.Array, *, max_scan: int,
+                           max_depth: int, T: int, k_pages: int,
+                           interpret: bool = False) -> jax.Array:
+    """Grid-blocked fused next_geq.
+
+    ``tile_base`` (Q // TILE_Q,) int32 — first stream page each query tile
+    may touch (host page routing guarantees ``tile_base[i] + k_pages`` never
+    exceeds ``num_pages``); ``lids/xs/pos0/s0`` (Q,) int32 queries sorted by
+    anchor page with their bucket-lookup start state; ``csyms_pg/csums_pg``
+    (num_pages, PAGE) paged stream; remaining tables 1-D lane-padded.
+    Returns (Q,) int32 next_geq values (INT_INF past the end), bit-exact vs
+    ``engine.jnp_backend.next_geq_batch_paged``."""
     Q = lids.shape[0]
-    grid = (Q // TILE_Q,)
-    dims = dict(l1_pad=starts.shape[0], l_pad=firsts.shape[0],
-                nb_pad=bpos.shape[0], n_pad=csyms.shape[0],
+    num_pages, page = csyms_pg.shape
+    dims = dict(l1_pad=starts.shape[0], l_pad=lasts.shape[0],
                 s_pad=ssum.shape[0])
-    kernel = lambda *refs: _list_intersect_kernel(
-        *refs, max_scan=max_scan, max_depth=max_depth, T=T, N=N, **dims)
-    qspec = pl.BlockSpec((1, TILE_Q), lambda i: (0, i))
-    tspec = lambda a: pl.BlockSpec((1, a.shape[0]), lambda i: (0, 0))
-    tables = (starts, firsts, lasts, kbits, boffs, bpos, babs, csyms, csums,
-              sleft, sright, ssum)
+    kernel = lambda *refs: _paged_intersect_kernel(
+        *refs, max_scan=max_scan, max_depth=max_depth, T=T, page=page,
+        k_pages=k_pages, **dims)
+    qspec = pl.BlockSpec((1, TILE_Q), lambda i, k, b: (0, i))
+    tspec = lambda a: pl.BlockSpec((1, a.shape[0]), lambda i, k, b: (0, 0))
+    pgspec = pl.BlockSpec((1, page), lambda i, k, b: (b[i] + k, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q // TILE_Q, k_pages),
+        in_specs=[qspec, qspec, qspec, qspec,
+                  tspec(starts), tspec(lasts), tspec(sleft), tspec(sright),
+                  tspec(ssum), pgspec, pgspec],
+        out_specs=pl.BlockSpec((1, TILE_Q), lambda i, k, b: (0, i)),
+        scratch_shapes=[pltpu.VMEM((1, TILE_Q), jnp.int32)
+                        for _ in range(4)],
+    )
     return pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[qspec, qspec] + [tspec(t) for t in tables],
-        out_specs=qspec,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, Q), jnp.int32),
         interpret=interpret,
-    )(lids[None, :], xs[None, :], *[t[None, :] for t in tables])[0]
+    )(tile_base, lids[None, :], xs[None, :], pos0[None, :], s0[None, :],
+      starts[None, :], lasts[None, :], sleft[None, :], sright[None, :],
+      ssum[None, :], csyms_pg, csums_pg)[0]

@@ -1,26 +1,38 @@
-"""Jitted wrappers for the fused list_intersect kernel.
+"""Wrappers for the grid-blocked paged list_intersect kernel.
 
 Two tiers:
 
-* ``pad_index_operands(fi)`` + ``next_geq_padded(...)`` — the serving path.
-  Padding the 12 index tables to lane multiples and pre-gathering the
-  per-position phrase sums (``sym_sum[c]``) is O(index size); doing it per
-  probe batch would put that on the hot path, so engines do it ONCE per
-  index and reuse the operand pack for every kernel launch.
+* ``pad_paged_operands(pi)`` + ``next_geq_paged(...)`` — the serving path.
+  Lane-padding the broadcast tables and snapshotting the host-side routing
+  tables is O(index size); engines do it ONCE per index and reuse the
+  operand pack for every launch.
 * ``next_geq`` / ``next_geq_probe`` / ``list_intersect`` — conveniences
-  that pad on the fly; fine for tests and one-shot calls.
+  that accept a FlatIndex or PagedIndex and pack on the fly; fine for
+  tests and one-shot calls.
+
+The **page router** (``route_pages``) is the host half of the paged design
+(DESIGN.md §2.5): it performs the (b)-sampling bucket lookup in numpy
+(bit-identical arithmetic to the device paths), derives each query's skip
+window ``[anchor, anchor + max_scan]``, sorts queries by anchor page, and
+emits per-tile base pages for the kernel's scalar-prefetch BlockSpec.  The
+kernel then DMAs exactly the pages each tile's windows can touch — K
+consecutive pages per tile, where K is the worst tile's page spread
+(rounded up to a power of two so the jit cache stays small).
 """
 
 from __future__ import annotations
 
 from functools import partial
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from .. import should_interpret
-from ...core.jax_index import FlatIndex
-from .list_intersect import TILE_Q, list_intersect_pallas
+from ...core.jax_index import (FlatIndex, PagedIndex, build_paged_index,
+                               INT_INF)
+from .list_intersect import TILE_Q, paged_intersect_pallas
 
 
 def _pad1(a: jax.Array, mult: int = 128) -> jax.Array:
@@ -29,64 +41,174 @@ def _pad1(a: jax.Array, mult: int = 128) -> jax.Array:
     return jnp.zeros(np_, jnp.int32).at[:n].set(a.astype(jnp.int32))
 
 
-def pad_index_operands(fi: FlatIndex
-                       ) -> tuple[tuple[jax.Array, ...], dict]:
-    """Lane-padded kernel operands + static bounds for one index.  Compute
-    once per FlatIndex (PallasEngine caches this at construction)."""
+def pad_paged_operands(pi: PagedIndex
+                       ) -> tuple[tuple[jax.Array, ...], dict, dict]:
+    """Kernel operand pack for one paged index: device tables (lane-padded
+    broadcast tables + the paged stream), static bounds, and the numpy
+    routing snapshot.  Compute once per index (PallasEngine caches this at
+    construction)."""
+    fl = pi.flat
     tables = (
-        _pad1(fi.starts), _pad1(fi.firsts), _pad1(fi.lasts),
-        _pad1(fi.kbits), _pad1(fi.bucket_offsets),
-        _pad1(fi.bck_c_pos), _pad1(fi.bck_abs),
-        _pad1(fi.c), _pad1(fi.sym_sum[fi.c]),
-        _pad1(fi.sym_left), _pad1(fi.sym_right), _pad1(fi.sym_sum),
+        _pad1(fl.starts), _pad1(fl.lasts),
+        _pad1(fl.sym_left), _pad1(fl.sym_right), _pad1(fl.sym_sum),
+        pi.c_syms_pg.astype(jnp.int32), pi.c_sums_pg.astype(jnp.int32),
     )
-    statics = dict(max_scan=fi.max_scan, max_depth=fi.max_depth,
-                   T=fi.num_terminals, N=int(fi.c.shape[0]))
-    return tables, statics
+    statics = dict(max_scan=fl.max_scan, max_depth=fl.max_depth,
+                   T=fl.num_terminals)
+    host = dict(
+        starts=np.asarray(fl.starts, np.int64),
+        firsts=np.asarray(fl.firsts, np.int64),
+        lasts=np.asarray(fl.lasts, np.int64),
+        kbits=np.asarray(fl.kbits, np.int64),
+        boffs=np.asarray(fl.bucket_offsets, np.int64),
+        babs=np.asarray(fl.bck_abs, np.int64),
+        banchor=(np.asarray(pi.bck_page, np.int64) * pi.page_size
+                 + np.asarray(pi.bck_off, np.int64)),
+        page_dir=np.asarray(pi.page_dir, np.int64),
+        page=pi.page_size,
+        num_pages=pi.num_pages,
+        max_scan=fl.max_scan,
+    )
+    return tables, statics, host
 
 
-@partial(jax.jit,
-         static_argnames=("max_scan", "max_depth", "T", "N", "interpret"))
-def next_geq_padded(tables: tuple[jax.Array, ...], list_ids: jax.Array,
-                    xs: jax.Array, *, max_scan: int, max_depth: int,
-                    T: int, N: int, interpret: bool) -> jax.Array:
-    """Fused next_geq over pre-padded operands: (Q,) ids × (Q,) probes ->
-    (Q,) int32 values, INT_INF where no element >= x exists."""
-    Q = list_ids.shape[0]
-    Qp = max(TILE_Q, -(-Q // TILE_Q) * TILE_Q)
-    lids = jnp.zeros(Qp, jnp.int32).at[:Q].set(list_ids.astype(jnp.int32))
-    xq = jnp.zeros(Qp, jnp.int32).at[:Q].set(xs.astype(jnp.int32))
-    out = list_intersect_pallas(
-        lids, xq, *tables, max_scan=max_scan, max_depth=max_depth,
-        T=T, N=N, interpret=interpret)
-    return out[:Q]
+def route_pages(host: dict, list_ids: np.ndarray, xs: np.ndarray):
+    """Host half of the paged query path: bucket lookup + page scheduling.
+
+    Returns ``(order, tile_base, k_pages, lids, xs, pos0, s0)`` where the
+    query arrays are sorted by anchor page and padded to a TILE_Q multiple
+    (by repeating the final query), ``tile_base[i]`` is the first page tile
+    ``i`` may touch, and ``k_pages`` is the static per-tile page count.
+    ``out_sorted[np.argsort(order)]`` restores request order (truncate the
+    padding first)."""
+    lids = np.asarray(list_ids, np.int64)
+    xq = np.asarray(xs, np.int64)
+    page = host["page"]
+    num_pages = host["num_pages"]
+    max_scan = host["max_scan"]
+
+    start = host["starts"][lids]
+    end = host["starts"][lids + 1]
+    first = host["firsts"][lids]
+    last = host["lasts"][lids]
+    boff = host["boffs"][lids]
+    bnum = host["boffs"][lids + 1] - boff
+    b = np.minimum(xq >> host["kbits"][lids], bnum - 1)
+    idx = boff + b
+    # mirror the kernel's masked gather: out-of-range index reads 0
+    nb = host["banchor"].size
+    ok = (idx >= 0) & (idx < nb)
+    safe = np.clip(idx, 0, max(nb - 1, 0))
+    pos0 = np.where(ok, host["banchor"][safe] if nb else 0, 0)
+    s0 = np.where(ok, host["babs"][safe] if nb else 0, 0)
+    head = xq <= first
+    pos0 = np.where(head, start, pos0)
+    s0 = np.where(head, first, s0)
+
+    # Active lanes sort by anchor page; their window is capped both by the
+    # skip budget and by the list's final page from the page directory
+    # (reads stop strictly before ``end``, and ``page_dir[lid + 1]`` is
+    # ``starts[lid + 1] // page`` — a list ending early in a page never
+    # drags later pages in).  Lanes that settle at k == 0 never read a
+    # page; they park at the LOWEST active anchor page so they cluster
+    # into spread-1 tiles instead of widening a mixed tile's page window
+    # (parking at a fixed page would reinflate k_pages toward num_pages).
+    needs = (s0 < xq) & (pos0 < end) & (xq <= last)
+    act_lo = np.clip(pos0 // page, 0, num_pages - 1)
+    end_page = np.clip(host["page_dir"][lids + 1], 0, num_pages - 1)
+    park = int(act_lo[needs].min()) if needs.any() else 0
+    lo = np.where(needs, act_lo, park)
+    hi = np.where(needs, np.minimum((pos0 + max_scan) // page, end_page),
+                  park)
+
+    order = np.argsort(lo, kind="stable")
+    q = order.size
+    q_pad = max(TILE_Q, -(-q // TILE_Q) * TILE_Q)
+    take = np.concatenate([order, np.repeat(order[-1:], q_pad - q)])
+
+    lo_t = lo[take].reshape(-1, TILE_Q)
+    hi_t = hi[take].reshape(-1, TILE_Q)
+    base = lo_t.min(axis=1)
+    spread = int((hi_t.max(axis=1) - base + 1).max(initial=1))
+    k_pages = min(1 << (spread - 1).bit_length(), num_pages)
+    base = np.minimum(base, num_pages - k_pages)
+
+    return (order, base.astype(np.int32), k_pages,
+            lids[take].astype(np.int32), xq[take].astype(np.int32),
+            pos0[take].astype(np.int32), s0[take].astype(np.int32))
 
 
-def next_geq(fi: FlatIndex, list_ids: jax.Array, xs: jax.Array,
-             interpret: bool | None = None) -> jax.Array:
-    """One-shot convenience: pads the index operands on the fly."""
+@partial(jax.jit, static_argnames=("max_scan", "max_depth", "T", "k_pages",
+                                   "interpret"))
+def _paged_call(tables: tuple[jax.Array, ...], tile_base: jax.Array,
+                lids: jax.Array, xs: jax.Array, pos0: jax.Array,
+                s0: jax.Array, *, max_scan: int, max_depth: int, T: int,
+                k_pages: int, interpret: bool) -> jax.Array:
+    starts, lasts, sleft, sright, ssum, csyms_pg, csums_pg = tables
+    return paged_intersect_pallas(
+        tile_base, lids, xs, pos0, s0, starts, lasts, sleft, sright, ssum,
+        csyms_pg, csums_pg, max_scan=max_scan, max_depth=max_depth, T=T,
+        k_pages=k_pages, interpret=interpret)
+
+
+def next_geq_paged(tables: tuple[jax.Array, ...], host: dict,
+                   list_ids: np.ndarray, xs: np.ndarray, *, max_scan: int,
+                   max_depth: int, T: int, interpret: bool) -> np.ndarray:
+    """Fused paged next_geq over a cached operand pack: (Q,) ids × (Q,)
+    probes -> (Q,) int32 values, INT_INF where no element >= x exists.
+    Routes pages on the host, launches the grid-blocked kernel, restores
+    request order.  numpy in, numpy out: the router already lives on the
+    host and the unsort forces a device sync anyway, so returning numpy
+    avoids a pointless bounce back to device at the engine boundary."""
+    q = np.asarray(list_ids).shape[0]
+    if q == 0:
+        return np.zeros(0, np.int32)
+    order, base, k_pages, lids_s, xs_s, pos0_s, s0_s = route_pages(
+        host, list_ids, xs)
+    out = _paged_call(tables, jnp.asarray(base), jnp.asarray(lids_s),
+                      jnp.asarray(xs_s), jnp.asarray(pos0_s),
+                      jnp.asarray(s0_s), max_scan=max_scan,
+                      max_depth=max_depth, T=T, k_pages=k_pages,
+                      interpret=interpret)
+    unsort = np.empty(q, np.int64)
+    unsort[order] = np.arange(q)
+    return np.asarray(out)[:q][unsort]
+
+
+def _as_paged(index: FlatIndex | PagedIndex) -> PagedIndex:
+    return index if isinstance(index, PagedIndex) else \
+        build_paged_index(index)
+
+
+def next_geq(index: FlatIndex | PagedIndex, list_ids: jax.Array,
+             xs: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """One-shot convenience: packs the paged operands on the fly."""
     if interpret is None:
         interpret = should_interpret()
-    tables, statics = pad_index_operands(fi)
-    return next_geq_padded(tables, list_ids, xs, interpret=interpret,
-                           **statics)
+    tables, statics, host = pad_paged_operands(_as_paged(index))
+    return next_geq_paged(tables, host, np.asarray(list_ids),
+                          np.asarray(xs), interpret=interpret, **statics)
 
 
-def next_geq_probe(fi: FlatIndex, list_ids: jax.Array, xs: jax.Array,
+def next_geq_probe(index: FlatIndex | PagedIndex, list_ids: jax.Array,
+                   xs: jax.Array,
                    interpret: bool | None = None) -> jax.Array:
     """Row-wise probe: (B,) list ids × (B, M) probes -> (B, M) next_geq
     values, by flattening into one fused kernel launch."""
     B, M = xs.shape
-    flat_ids = jnp.repeat(list_ids.astype(jnp.int32), M)
-    vals = next_geq(fi, flat_ids, xs.reshape(-1), interpret=interpret)
+    flat_ids = jnp.repeat(jnp.asarray(list_ids, jnp.int32), M)
+    vals = next_geq(index, flat_ids, jnp.asarray(xs).reshape(-1),
+                    interpret=interpret)
     return vals.reshape(B, M)
 
 
-def list_intersect(fi: FlatIndex, long_ids: jax.Array, xs: jax.Array,
+def list_intersect(index: FlatIndex | PagedIndex, long_ids: jax.Array,
+                   xs: jax.Array,
                    interpret: bool | None = None) -> jax.Array:
     """Membership-filter the probe matrix against the long lists: keeps
     xs[b, m] where it occurs in list long_ids[b], INT_INF elsewhere
     (INT_INF padding in xs never matches)."""
-    vals = next_geq_probe(fi, long_ids, xs, interpret=interpret)
-    INT_INF = jnp.int32(2**31 - 1)
-    return jnp.where((vals == xs) & (xs != INT_INF), xs, INT_INF)
+    vals = next_geq_probe(index, long_ids, xs, interpret=interpret)
+    sent = jnp.int32(INT_INF)
+    xs = jnp.asarray(xs, jnp.int32)
+    return jnp.where((vals == xs) & (xs != sent), xs, sent)

@@ -9,17 +9,28 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ...core.jax_index import FlatIndex
+from ...core.jax_index import FlatIndex, PagedIndex
 
 
-def next_geq_ref(fi: FlatIndex, list_ids: jax.Array,
+def _flat(index: FlatIndex | PagedIndex) -> FlatIndex:
+    return index.flat if isinstance(index, PagedIndex) else index
+
+
+def next_geq_ref(index: FlatIndex | PagedIndex, list_ids: jax.Array,
                  xs: jax.Array) -> jax.Array:
     from ...engine import jnp_backend
-    return jnp_backend.next_geq_batch(fi, list_ids, xs)
+    return jnp_backend.next_geq_batch(_flat(index), list_ids, xs)
 
 
-def list_intersect_ref(fi: FlatIndex, long_ids: jax.Array,
+def next_geq_paged_ref(pi: PagedIndex, list_ids: jax.Array,
+                       xs: jax.Array) -> jax.Array:
+    """The paged-addressing jnp mirror — must equal next_geq_ref exactly."""
+    from ...engine import jnp_backend
+    return jnp_backend.next_geq_batch_paged(pi, list_ids, xs)
+
+
+def list_intersect_ref(index: FlatIndex | PagedIndex, long_ids: jax.Array,
                        xs: jax.Array) -> jax.Array:
     from ...engine import jnp_backend
-    vals = jnp_backend.probe_batch(fi, long_ids, xs)
+    vals = jnp_backend.probe_batch(_flat(index), long_ids, xs)
     return jnp_backend.match_mask(vals, xs)

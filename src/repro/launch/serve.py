@@ -19,7 +19,8 @@ import time
 import numpy as np
 
 
-def serve_queries(n_queries: int, engine: str = "jnp") -> None:
+def serve_queries(n_queries: int, engine: str = "jnp",
+                  data_shards: int = 0) -> None:
     from ..core.repair import repair_compress
     from ..index import zipf_corpus
     from ..serve.query_serve import QueryServer
@@ -27,7 +28,18 @@ def serve_queries(n_queries: int, engine: str = "jnp") -> None:
     corpus = zipf_corpus(num_docs=2000, vocab_size=4000, seed=0)
     lists = corpus.postings()
     res = repair_compress(lists)
-    srv = QueryServer(res, max_short_len=256, engine=engine)
+    mesh = None
+    if data_shards:
+        import jax
+        import numpy as _np
+        from jax.sharding import Mesh
+        devs = jax.devices()
+        if data_shards > len(devs):
+            raise SystemExit(f"--data-shards {data_shards} > "
+                             f"{len(devs)} available devices")
+        mesh = Mesh(_np.array(devs[:data_shards]), ("data",))
+        print(f"shard_map dispatch over data axis: {data_shards} device(s)")
+    srv = QueryServer(res, max_short_len=256, engine=engine, mesh=mesh)
     rng = np.random.default_rng(0)
     pairs = [tuple(map(int, rng.choice(len(lists), 2, replace=False)))
              for _ in range(n_queries)]
@@ -71,9 +83,12 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--engine", choices=("host", "jnp", "pallas"),
                     default="jnp")
+    ap.add_argument("--data-shards", type=int, default=0,
+                    help="shard the index across N devices on a 'data' "
+                         "mesh axis (0 = unsharded)")
     args = ap.parse_args()
     if args.tier == "queries":
-        serve_queries(args.n, args.engine)
+        serve_queries(args.n, args.engine, data_shards=args.data_shards)
     else:
         serve_lm(args.arch, args.n)
 

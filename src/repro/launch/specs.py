@@ -585,7 +585,7 @@ def _ir_index_shardings(mesh: Mesh) -> dict:
 
 
 def _ir_next_geq(idx: dict, static, list_id, x, unroll: bool = True):
-    """next_geq over the index-dict form (mirrors core/batched.py).
+    """next_geq over the index-dict form (mirrors engine/jnp_backend.py).
     ``unroll=True`` expands the two fixed-trip loops to straight-line HLO
     so cost_analysis counts every iteration (an HLO while body is counted
     ONCE regardless of trips — same caveat as the LM scan)."""

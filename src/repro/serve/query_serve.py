@@ -14,9 +14,14 @@ time scan).  The server:
   (very long "short" lists), exactly like a real tier routes outliers.
 
 Pick the backend at construction: ``engine="jnp"`` (default, portable),
-``"pallas"`` (fused TPU kernel), or ``"host"`` (CPU reference).
-Throughput, not per-query latency, is the serving metric (DESIGN.md §2
-"assumption changes").
+``"pallas"`` (the grid-blocked paged kernel), or ``"host"`` (CPU
+reference).  Two scaling axes thread straight through to the device
+engines (DESIGN.md §2.5): ``page_size`` controls the paged stream layout
+(``engine="pallas"`` always pages; ``engine="jnp"`` pages when
+``paged=True``), and ``mesh`` (a Mesh with a ``data`` axis) turns on the
+shard_map dispatch — grammar replicated, stream/spans list-partitioned
+across devices.  Throughput, not per-query latency, is the serving metric
+(DESIGN.md §2 "assumption changes").
 """
 
 from __future__ import annotations
@@ -25,7 +30,9 @@ from typing import Sequence
 
 import numpy as np
 
-from ..core.jax_index import FlatIndex, build_flat_index
+from jax.sharding import Mesh
+
+from ..core.jax_index import DEFAULT_PAGE, FlatIndex, build_flat_index
 from ..core.repair import RePairResult
 from ..engine import DeviceEngine, Engine, make_engine
 
@@ -33,16 +40,21 @@ from ..engine import DeviceEngine, Engine, make_engine
 class QueryServer:
     def __init__(self, res: RePairResult, max_short_len: int = 256,
                  B: int = 8, engine: str = "jnp",
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 page_size: int = DEFAULT_PAGE, paged: bool = False,
+                 mesh: Mesh | None = None):
         self.res = res
         self._B = B
         self._fi: FlatIndex | None = None
         self.max_short_len = max_short_len
         kwargs: dict = {}
         if engine in ("jnp", "pallas"):
-            kwargs = dict(max_short_len=max_short_len, B=B)
+            kwargs = dict(max_short_len=max_short_len, B=B, mesh=mesh,
+                          page_size=page_size)
             if engine == "pallas":
                 kwargs["interpret"] = interpret
+            else:
+                kwargs["paged"] = paged
         self.engine: Engine = make_engine(engine, res, **kwargs)
         if isinstance(self.engine, DeviceEngine):
             self._fi = self.engine.fi

@@ -6,9 +6,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.jax_index import build_flat_index, FlatIndex, INT_INF
-from repro.core.batched import (make_expand, make_member, make_next_geq,
-                                make_pair_intersect)
 from repro.core.repair import repair_compress
+from repro.engine import jnp_backend as J
 from repro.serve.query_serve import QueryServer
 
 
@@ -18,11 +17,11 @@ def flat(lists, repair_result):
 
 
 def test_next_geq_batch(lists, flat, rng):
-    nd = make_next_geq(flat)
     L = len(lists)
     lids = rng.integers(0, L, size=400).astype(np.int32)
     xs = rng.integers(0, flat.universe, size=400).astype(np.int32)
-    got = np.asarray(nd(jnp.asarray(lids), jnp.asarray(xs)))
+    got = np.asarray(J.next_geq_batch(flat, jnp.asarray(lids),
+                                      jnp.asarray(xs)))
     for li, x, g in zip(lids, xs, got):
         arr = lists[li]
         pos = np.searchsorted(arr, x)
@@ -31,7 +30,6 @@ def test_next_geq_batch(lists, flat, rng):
 
 
 def test_member_batch(lists, flat, rng):
-    mb = make_member(flat)
     L = len(lists)
     # half real members, half random probes
     lids, xs, want = [], [], []
@@ -44,15 +42,16 @@ def test_member_batch(lists, flat, rng):
         lids.append(li)
         xs.append(x)
         want.append(bool(np.isin(x, lists[li])))
-    got = np.asarray(mb(jnp.asarray(lids, jnp.int32),
-                        jnp.asarray(xs, jnp.int32)))
+    got = np.asarray(J.member_batch(flat, jnp.asarray(lids, jnp.int32),
+                                    jnp.asarray(xs, jnp.int32)))
     np.testing.assert_array_equal(got, np.asarray(want))
 
 
 def test_expand_batch(lists, flat):
     ml = max(len(l) for l in lists)
-    ex = make_expand(flat, ml)
-    dec = np.asarray(ex(jnp.arange(len(lists), dtype=jnp.int32)))
+    dec = np.asarray(J.expand_batch(flat,
+                                    jnp.arange(len(lists), dtype=jnp.int32),
+                                    ml))
     for i, pl in enumerate(lists):
         got = dec[i][dec[i] != int(INT_INF)]
         np.testing.assert_array_equal(got, pl)
@@ -60,7 +59,6 @@ def test_expand_batch(lists, flat):
 
 def test_pair_intersect_batch(lists, flat, rng):
     ml = max(len(l) for l in lists)
-    pi = make_pair_intersect(flat, ml)
     shorts, longs = [], []
     for _ in range(30):
         i, j = rng.choice(len(lists), 2, replace=False)
@@ -68,8 +66,8 @@ def test_pair_intersect_batch(lists, flat, rng):
             i, j = j, i
         shorts.append(int(i))
         longs.append(int(j))
-    mat = np.asarray(pi(jnp.asarray(shorts, jnp.int32),
-                        jnp.asarray(longs, jnp.int32)))
+    mat = np.asarray(J.pair_intersect(flat, jnp.asarray(shorts, jnp.int32),
+                                      jnp.asarray(longs, jnp.int32), ml))
     for row, i, j in zip(mat, shorts, longs):
         got = row[row != int(INT_INF)]
         np.testing.assert_array_equal(got, np.intersect1d(lists[i], lists[j]))

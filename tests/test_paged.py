@@ -1,0 +1,256 @@
+"""Paged device index (DESIGN.md §2.5): multi-page parity and sharding.
+
+The corpus here is built so the compressed stream spans MANY pages at the
+test page size (N > 4 × PAGE — the acceptance bar for the grid-blocked
+kernel), with skip windows that straddle page boundaries.  Every backend —
+host cursors, flat jnp, paged jnp, and the grid-blocked Pallas kernel in
+interpret mode — must agree bit-exactly.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.core.jax_index import (DEFAULT_PAGE, INT_INF, build_flat_index,
+                                  build_paged_index)
+from repro.core.repair import repair_compress
+from repro.engine import HostEngine, JnpEngine, PallasEngine
+from repro.engine import jnp_backend as J
+from repro.engine.device import shard_flat_index
+from repro.kernels.list_intersect import ops as K
+from repro.kernels.list_intersect.ops import route_pages
+
+PAGE = 256  # small page so the module corpus spans many pages
+
+
+@pytest.fixture(scope="module")
+def plists(rng):
+    """Long, dense lists: the compressed stream must span >= 4 pages, and
+    runs of tiny gaps make single skip windows cross page boundaries."""
+    u = 60_000
+    lists = []
+    for i in range(24):
+        ln = int(rng.integers(200, 900))
+        base = rng.choice(u, size=ln, replace=False)
+        lists.append(np.unique(base.astype(np.int64)))
+    # dense runs: consecutive ids compress into deep phrases whose buckets
+    # span many symbols — page-straddling skip windows
+    lists.append(np.arange(0, 3000, dtype=np.int64))
+    lists.append(np.arange(10_000, 14_000, 2, dtype=np.int64))
+    lists.append(np.asarray([u - 2]))                     # singleton tail
+    return lists
+
+
+@pytest.fixture(scope="module")
+def pres(plists):
+    return repair_compress(plists)
+
+
+@pytest.fixture(scope="module")
+def pfi(pres):
+    return build_flat_index(pres)
+
+
+@pytest.fixture(scope="module")
+def ppi(pfi):
+    return build_paged_index(pfi, page_size=PAGE)
+
+
+def test_corpus_spans_four_pages(pfi, ppi):
+    """The acceptance-bar precondition: this corpus genuinely exercises
+    the multi-page path."""
+    assert ppi.num_pages >= 4
+    assert int(pfi.c.shape[0]) > 4 * ppi.page_size
+
+
+def test_paged_layout_roundtrip(pfi, ppi):
+    """Paging is a pure re-addressing: flattening the pages restores C,
+    the page directory mirrors starts, and the bucket tables' (page,
+    offset) pairs reconstruct the absolute anchor positions."""
+    N = int(pfi.c.shape[0])
+    flat_again = np.asarray(ppi.c_syms_pg).reshape(-1)[:N]
+    np.testing.assert_array_equal(flat_again, np.asarray(pfi.c))
+    sums = np.asarray(pfi.sym_sum)[np.asarray(pfi.c)]
+    np.testing.assert_array_equal(
+        np.asarray(ppi.c_sums_pg).reshape(-1)[:N], sums)
+    np.testing.assert_array_equal(
+        np.asarray(ppi.page_dir),
+        np.asarray(pfi.starts) // ppi.page_size)
+    starts = np.asarray(pfi.starts, np.int64)
+    owner = np.repeat(np.arange(starts.size - 1),
+                      np.diff(np.asarray(pfi.bucket_offsets)))
+    abs_pos = starts[owner] + np.asarray(pfi.bck_c_pos, np.int64)
+    got = (np.asarray(ppi.bck_page, np.int64) * ppi.page_size
+           + np.asarray(ppi.bck_off, np.int64))
+    np.testing.assert_array_equal(got, abs_pos)
+
+
+def test_paged_index_pytree(ppi):
+    leaves, treedef = jax.tree.flatten(ppi)
+    pi2 = jax.tree.unflatten(treedef, leaves)
+    assert pi2.page_size == ppi.page_size
+    assert pi2.flat.max_scan == ppi.flat.max_scan
+    for a, b in zip(leaves, jax.tree.leaves(pi2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.fixture(scope="module")
+def pengines(pres, pfi, ppi):
+    return {
+        "host": HostEngine(pres),
+        "jnp": JnpEngine(pres, fi=pfi),
+        "jnp-paged": JnpEngine(pres, fi=pfi, pi=ppi),
+        "pallas": PallasEngine(pres, fi=pfi, pi=ppi, interpret=True),
+    }
+
+
+def test_multipage_next_geq_parity(plists, pres, pengines, rng):
+    """All four backends bit-exact across the whole domain, including
+    probes past the last element and over-universe values."""
+    L = len(plists)
+    u = pres.universe
+    lids = rng.integers(0, L, 600).astype(np.int32)
+    xs = rng.integers(0, u + u // 2, 600).astype(np.int32)
+    outs = {n: e.next_geq_batch(lids, xs) for n, e in pengines.items()}
+    for q, (li, x) in enumerate(zip(lids, xs)):
+        arr = plists[li]
+        pos = np.searchsorted(arr, x)
+        want = int(arr[pos]) if pos < len(arr) else int(INT_INF)
+        assert outs["host"][q] == want, f"host q{q} list{li} x{x}"
+    base = outs["host"]
+    for n, got in outs.items():
+        np.testing.assert_array_equal(got, base, err_msg=n)
+
+
+def test_page_straddling_windows(plists, pfi, ppi, pengines):
+    """Skip windows that start in one page and halt in the next: probe
+    past every ~half-window-th element of every list so anchors land all
+    over the stream, including within max_scan of page edges.  The router
+    must schedule >1 page per tile and the kernel must resume those lanes
+    across the page edge."""
+    step = max(1, pfi.max_scan // 2)
+    lids_l, xs_l = [], []
+    for li, vals in enumerate(plists):
+        probes = (vals[::step] + 1)
+        probes = probes[probes <= vals[-1]]
+        lids_l.append(np.full(probes.size, li))
+        xs_l.append(probes)
+    lids = np.concatenate(lids_l).astype(np.int32)
+    xs = np.concatenate(xs_l).astype(np.int32)
+
+    tables, statics, host = K.pad_paged_operands(ppi)
+    order, tile_base, k_pages, lids_s, xs_s, pos0_s, s0_s = route_pages(
+        host, lids, xs)
+    assert k_pages > 1, "multi-page batches must schedule >1 page per tile"
+    # at least one ACTIVE lane's window crosses a page boundary
+    end = host["starts"][lids_s.astype(np.int64) + 1]
+    last = host["lasts"][lids_s.astype(np.int64)]
+    active = (s0_s < xs_s) & (pos0_s < end) & (xs_s <= last)
+    straddle = active & (pos0_s % PAGE + pfi.max_scan >= PAGE)
+    assert straddle.any(), "no page-boundary-straddling skip window"
+
+    want = pengines["host"].next_geq_batch(lids, xs)
+    for n in ("jnp-paged", "pallas"):
+        np.testing.assert_array_equal(
+            pengines[n].next_geq_batch(lids, xs), want, err_msg=n)
+
+
+def test_multipage_intersections(plists, pengines, rng):
+    L = len(plists)
+    pairs = [tuple(map(int, rng.choice(L, 2, replace=False)))
+             for _ in range(8)]
+    pairs.append((len(plists) - 3, len(plists) - 2))  # dense × dense
+    outs = {n: e.intersect_pairs(pairs) for n, e in pengines.items()}
+    for k, (a, b) in enumerate(pairs):
+        oracle = np.intersect1d(plists[a], plists[b])
+        for n in pengines:
+            np.testing.assert_array_equal(outs[n][k], oracle,
+                                          err_msg=f"{n} pair {k}")
+
+
+def test_router_parks_inactive_lanes(plists, ppi):
+    """Settled lanes (x > last) must park at their OWN anchor page, not
+    page 0: mixing them into a batch of high-page probes must not inflate
+    the static per-tile page count back toward num_pages."""
+    tables, statics, host = K.pad_paged_operands(ppi)
+    hi_list = int(np.argmax(np.asarray(ppi.flat.starts)[1:]))  # last list
+    vals = plists[hi_list]
+    lids = np.full(200, hi_list, np.int64)
+    xs = np.minimum(vals[np.linspace(0, vals.size - 1, 200).astype(int)] + 1,
+                    np.iinfo(np.int32).max).astype(np.int64)
+    _, _, k_alone, *_ = route_pages(host, lids, xs)
+    # mix in lanes that settle at init: probes past every list's last
+    dead_l = np.arange(len(plists), dtype=np.int64).repeat(3)
+    dead_x = np.asarray([int(plists[i][-1]) + 1 for i in dead_l])
+    _, base, k_mixed, *_ = route_pages(
+        host, np.concatenate([lids, dead_l]), np.concatenate([xs, dead_x]))
+    assert k_mixed <= max(k_alone, 2), \
+        f"inactive lanes inflated k_pages: {k_alone} -> {k_mixed}"
+
+
+def test_router_vmem_is_page_bounded(ppi):
+    """The kernel's stream residency is (k_pages chosen per batch) single
+    pages — never the whole stream: tile_base schedules within
+    [0, num_pages - k_pages]."""
+    tables, statics, host = K.pad_paged_operands(ppi)
+    rng = np.random.default_rng(0)
+    L = np.asarray(ppi.flat.starts).size - 1
+    lids = rng.integers(0, L, 512)
+    xs = rng.integers(0, ppi.flat.universe, 512)
+    order, tile_base, k_pages, *_ = route_pages(host, lids, xs)
+    assert k_pages <= ppi.num_pages
+    assert (tile_base >= 0).all()
+    assert (tile_base + k_pages <= ppi.num_pages).all()
+
+
+# -- sharded dispatch --------------------------------------------------------------
+
+def test_shard_flat_index_partition(pfi):
+    """2-way list partition: contiguous coverage, rebased spans, and the
+    routing tables reconstruct every list's stream slice."""
+    stacked, shard_of_list, local_lid = shard_flat_index(pfi, 2)
+    starts = np.asarray(pfi.starts, np.int64)
+    c = np.asarray(pfi.c)
+    L = starts.size - 1
+    assert shard_of_list.shape == (L,)
+    assert (np.diff(shard_of_list) >= 0).all()          # contiguous
+    for gid in range(L):
+        d, ll = int(shard_of_list[gid]), int(local_lid[gid])
+        a = stacked["starts"][d, ll]
+        b = stacked["starts"][d, ll + 1]
+        span = stacked["c"][d, a:b]
+        np.testing.assert_array_equal(span, c[starts[gid]:starts[gid + 1]])
+        assert stacked["firsts"][d, ll] == np.asarray(pfi.firsts)[gid]
+        assert stacked["lasts"][d, ll] == np.asarray(pfi.lasts)[gid]
+
+
+def test_sharded_round_trip_one_device_mesh(pres, pfi, plists, rng):
+    """ISSUE acceptance: a sharded FlatIndex round-trips on a 1-device
+    mesh — shard_map dispatch must equal the unsharded engine bit-exactly."""
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    eng = JnpEngine(pres, fi=pfi, mesh=mesh)
+    assert eng._sharded_next_geq is not None
+    plain = JnpEngine(pres, fi=pfi)
+    L = len(plists)
+    lids = rng.integers(0, L, 300).astype(np.int32)
+    xs = rng.integers(0, pres.universe + 10, 300).astype(np.int32)
+    np.testing.assert_array_equal(eng.next_geq_batch(lids, xs),
+                                  plain.next_geq_batch(lids, xs))
+
+
+def test_query_server_paged_and_meshed(pres, plists):
+    from repro.serve.query_serve import QueryServer
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    srv = QueryServer(pres, engine="jnp", paged=True, page_size=PAGE,
+                      mesh=mesh)
+    qs = [(0, 1), (2, len(plists) - 3)]
+    outs = srv.and_batch(qs)
+    for (a, b), got in zip(qs, outs):
+        np.testing.assert_array_equal(got,
+                                      np.intersect1d(plists[a], plists[b]))
+    lids = np.asarray([0, 1], np.int32)
+    xs = np.asarray([int(plists[0][0]), int(plists[1][-1]) + 1], np.int32)
+    want = HostEngine(pres).next_geq_batch(lids, xs)
+    np.testing.assert_array_equal(srv.next_geq_batch(lids, xs), want)
