@@ -1,0 +1,52 @@
+"""Construction throughput: the build-pipeline twin of bench_intersection.
+
+Sweeps corpus size x builder backend (``repro.build``: host numpy loop vs
+the fixed-shape device round pipeline) and records input symbols/sec and
+rules/sec into BENCH_build.json via benchmarks/run.py — the perf
+trajectory of the construction tier across PRs, plus the device speedup
+over host at the largest sweep point (the ISSUE-3 acceptance number).
+
+The pallas builder is included automatically on TPU; on CPU its kernel
+runs in interpret mode (a parity harness, not a perf configuration), so
+it is opt-in via REPRO_BENCH_PALLAS=1.
+
+Standalone:
+
+  PYTHONPATH=src python -m benchmarks.bench_build --builders host,jnp
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from .bench_compression import build_sweep
+
+
+def main(builders=None, sizes=(250, 500, 1000, 2000)) -> dict:
+    if builders is None:
+        builders = ["host", "jnp"]
+        if (jax.default_backend() == "tpu"
+                or os.environ.get("REPRO_BENCH_PALLAS")):
+            builders.append("pallas")
+    # a finite table cap keeps every backend on the identical [CN07]
+    # capped-counting configuration the parity gate covers (and is what
+    # bounds the pallas candidate table on real corpora)
+    return build_sweep(builders=tuple(builders), sizes=tuple(sizes),
+                       table_cap=4096)
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--builders", type=str, default=None,
+                    help="comma list from {host,jnp,pallas}")
+    ap.add_argument("--sizes", type=str, default="250,500,1000,2000")
+    args = ap.parse_args()
+    payload = main(
+        builders=args.builders.split(",") if args.builders else None,
+        sizes=tuple(int(s) for s in args.sizes.split(",")))
+    print(json.dumps(payload, indent=2, sort_keys=True))

@@ -1,19 +1,34 @@
-"""Shared benchmark utilities: corpus builder cache, timing, CSV output."""
+"""Shared benchmark utilities: corpus builder cache, timing, CSV output.
+
+Every corpus a bench generates is keyed by ONE explicit numpy seed,
+``BENCH_SEED`` (env ``REPRO_BENCH_SEED``, default 0), threaded through
+``corpus_lists`` — so any two machines running the same bench produce
+byte-identical BENCH_*.json inputs, and a recorded regression is a code
+regression, not a corpus roll.  Benches should record the seed into
+their JSON payload (see ``bench_build``).
+"""
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
 
 from repro.index.corpus import zipf_corpus, pack_documents, randomize_lists
 
+#: The one corpus seed of a benchmark run; BENCH_*.json results are a
+#: pure function of (code, BENCH_SEED).
+BENCH_SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
+
 _CACHE: dict = {}
 
 
-def corpus_lists(num_docs=2000, vocab_size=5000, mean_doc_len=120, seed=0,
-                 pack=1):
-    """Postings of the synthetic TREC-like collection (cached)."""
+def corpus_lists(num_docs=2000, vocab_size=5000, mean_doc_len=120,
+                 seed=None, pack=1):
+    """Postings of the synthetic TREC-like collection (cached).
+    ``seed=None`` means the run-wide ``BENCH_SEED``."""
+    seed = BENCH_SEED if seed is None else seed
     key = (num_docs, vocab_size, mean_doc_len, seed, pack)
     if key not in _CACHE:
         c = zipf_corpus(num_docs=num_docs, vocab_size=vocab_size,

@@ -20,6 +20,7 @@ import traceback
 
 BENCHES = {
     "fig2": "benchmarks.bench_compression",
+    "build": "benchmarks.bench_build",
     "heights": "benchmarks.bench_heights",
     "fig3": "benchmarks.bench_intersection",
     "fig4": "benchmarks.bench_tradeoff",

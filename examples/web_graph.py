@@ -1,7 +1,7 @@
 """Re-Pair compressed adjacency lists feeding GCN message passing — the
 paper's own lineage ([CN07] compressed Web graphs; adjacency lists ARE
 inverted lists) and the gcn-cora arch-applicability demonstration
-(DESIGN.md §5).
+(DESIGN.md §6).
 
 The graph's per-node out-neighbor lists are Re-Pair compressed exactly
 like posting lists; message passing decodes them back to an edge index on
@@ -14,8 +14,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.jax_index import INT_INF, build_flat_index
-from repro.core.repair import repair_compress
+from repro.build import make_builder
+from repro.core.jax_index import INT_INF
 from repro.engine import jnp_backend as J
 from repro.models import gnn as G
 
@@ -42,16 +42,19 @@ def main() -> None:
     n_edges = sum(len(a) for a in adj)
     print(f"web graph: {n} nodes, {n_edges} edges")
 
-    # --- compress adjacency with Re-Pair (the [CN07] use-case) ---
-    res = repair_compress(adj)
+    # --- compress adjacency with Re-Pair (the [CN07] use-case), on the
+    # device build pipeline: gap stream -> grammar -> FlatIndex without
+    # leaving the device mid-round (DESIGN.md §3) ---
+    built = make_builder("jnp").build_index(adj)
+    res, fi = built.res, built.fi
     from repro.core.dictionary import build_forest
     bits = build_forest(res.grammar).size_bits(res.seq.size)
     plain = n_edges * int(np.ceil(np.log2(n)))
     print(f"adjacency: plain {plain/8:.0f} B -> re-pair {bits/8:.0f} B "
-          f"({bits/plain:.2%}), {res.grammar.num_rules} rules")
+          f"({bits/plain:.2%}), {res.grammar.num_rules} rules "
+          f"(jnp builder)")
 
     # --- decode on device to an edge index ---
-    fi = build_flat_index(res)
     max_deg = max(len(a) for a in adj)
     mat = np.asarray(J.expand_batch(fi, jnp.arange(n, dtype=jnp.int32),
                                     max_deg))                 # (n, max_deg)

@@ -1,0 +1,56 @@
+"""Backend-pluggable Re-Pair index construction (DESIGN.md §3).
+
+One API — ``init_state`` / ``count_pairs`` / ``replace_round`` /
+``build_grammar`` / ``build_index`` — three interchangeable backends that
+produce bit-identical grammars:
+
+* ``host``   — the paper's offline numpy loop (``repair_compress``);
+* ``jnp``    — fixed-shape jitted rounds with a static symbol budget;
+* ``pallas`` — the same rounds with the ``kernels/pair_count`` histogram.
+
+    bld = make_builder("jnp", pairs_per_round=64)
+    built = bld.build_index(lists, paged=True)   # res + FlatIndex + paged
+
+This is the construction twin of ``repro.engine``: every consumer
+(``index/builder.py``, ``QueryServer.rebuild``, benchmarks, examples)
+depends on the API, never on a backend.
+"""
+
+from __future__ import annotations
+
+from .base import (BuildConfig, Builder, BuiltIndex, DEFAULT_RULE_BUDGET)
+from .host import HostBuilder
+from .jnp_builder import JnpBuilder
+from .pallas_builder import PallasBuilder
+
+BUILDERS: dict[str, type[Builder]] = {
+    "host": HostBuilder,
+    "jnp": JnpBuilder,
+    "pallas": PallasBuilder,
+}
+
+
+def validate_builders(names) -> None:
+    """Raise early (before any expensive sweep) on unknown backends."""
+    unknown = set(names) - set(BUILDERS)
+    if unknown:
+        raise ValueError(f"unknown builder(s) {sorted(unknown)}; "
+                         f"choose from {sorted(BUILDERS)}")
+
+
+def make_builder(name: str, config: BuildConfig | None = None,
+                 **overrides) -> Builder:
+    """Construct a builder by backend name; kwargs override config
+    fields (``pairs_per_round``, ``table_cap``, ``max_rules``, ...)."""
+    try:
+        cls = BUILDERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown builder {name!r}; choose from {sorted(BUILDERS)}"
+        ) from None
+    return cls(config, **overrides)
+
+
+__all__ = ["BuildConfig", "Builder", "BuiltIndex", "BUILDERS",
+           "DEFAULT_RULE_BUDGET", "HostBuilder", "JnpBuilder",
+           "PallasBuilder", "make_builder", "validate_builders"]

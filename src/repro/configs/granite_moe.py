@@ -3,7 +3,7 @@ d_ff=512 vocab=49155, MoE 40 experts top-8.
 [hf:ibm-granite/granite-3.0-1b-a400m-base family; hf]
 
 40 experts do not divide the 16-way model axis -> TP inside experts
-(d_ff=512 shards 16-way to 32), per DESIGN.md §4."""
+(d_ff=512 shards 16-way to 32), per DESIGN.md §5."""
 
 from ..models.transformer import LMConfig
 from .base import ArchSpec, LM_SHAPES

@@ -1,6 +1,6 @@
 """Deterministic, sharded, resumable data pipeline.
 
-Production posture (DESIGN.md §4): every host pulls only its shard of the
+Production posture (DESIGN.md §5): every host pulls only its shard of the
 global batch; the order is a pure function of (seed, step), so
 
 * any host can be restarted and recompute exactly its stream,
@@ -15,6 +15,14 @@ PRNG stream shaped like packed LM sequences).  A real deployment would swap
 ``SyntheticLMDataset`` for a file-backed dataset with the same
 ``batch_at(step)`` contract; everything above it (train loop, checkpoint,
 elastic restore) is production-real.
+
+The IR tier gets the same treatment: :class:`PostingsSource` is the
+versioned postings feed for the construction pipeline (DESIGN.md §3.4) —
+``lists_at(version)`` is a pure function of ``(seed, version)``, each
+version extending the collection, so any builder host can recompute
+exactly the snapshot it is asked to compress and a rebuilt index is
+reproducible across machines.  ``QueryServer.rebuild`` consumes it for
+build-then-hot-swap refresh.
 """
 
 from __future__ import annotations
@@ -68,6 +76,42 @@ class SyntheticLMDataset:
         mask = rng.random((cfg.global_batch, cfg.seq_len)) < 0.5
         tokens[:, 1:][mask] = dep[mask]
         return {"tokens": tokens[:, :-1], "targets": tokens[:, 1:]}
+
+
+class PostingsSource:
+    """Deterministic, versioned postings snapshots for index build and
+    refresh.
+
+    ``lists_at(version)`` is a pure function of ``(seed, version)``:
+    version ``v`` is the synthetic collection grown to
+    ``base_docs + v * growth_docs`` documents.  This models the refresh
+    workload the construction tier exists for — the collection grows, a
+    builder recompresses the snapshot (any backend, any host: same seed,
+    same lists), and the serving tier hot-swaps the result without a
+    restart (``QueryServer.rebuild``).
+    """
+
+    def __init__(self, base_docs: int = 500, growth_docs: int = 250,
+                 vocab: int = 2000, mean_doc_len: int = 80, seed: int = 0):
+        self.base_docs = base_docs
+        self.growth_docs = growth_docs
+        self.vocab = vocab
+        self.mean_doc_len = mean_doc_len
+        self.seed = seed
+
+    def num_docs_at(self, version: int) -> int:
+        return self.base_docs + version * self.growth_docs
+
+    def lists_at(self, version: int) -> tuple[list[np.ndarray], int]:
+        """(postings lists, universe) of snapshot ``version`` — pure in
+        (seed, version), so replays and cross-host builds are exact."""
+        from ..index.corpus import zipf_corpus  # local: keep data/ light
+
+        corpus = zipf_corpus(num_docs=self.num_docs_at(version),
+                             vocab_size=self.vocab,
+                             mean_doc_len=self.mean_doc_len,
+                             seed=self.seed)
+        return corpus.postings(), corpus.num_docs
 
 
 class ShardedTokenPipeline:

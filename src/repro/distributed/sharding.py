@@ -33,7 +33,7 @@ def lm_param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
                   n_experts: int = 0, kv_replicate: bool = False) -> P:
     """path is '/'-joined key path.  Layer-stacked params have a leading L
     dim (never sharded).  ``kv_replicate`` keeps wk/wv whole per shard
-    (KV-head replication for n_kv < tp; DESIGN.md §4 / §Perf H7)."""
+    (KV-head replication for n_kv < tp; DESIGN.md §5 / §Perf H7)."""
     tp = _axis_size(mesh, "model")
     if "embed" in path:
         return P("model", None)

@@ -15,10 +15,11 @@ from typing import Sequence
 
 import numpy as np
 
+from ..build import BuildConfig, Builder, make_builder
 from ..core import bitmaps as BM
 from ..core import codecs as CD
 from ..core.optimize import optimize_rules
-from ..core.repair import RePairResult, repair_compress
+from ..core.repair import RePairResult
 from ..core.sampling import ASampling, BSampling, build_a_sampling, build_b_sampling
 
 
@@ -75,6 +76,8 @@ def build_index(
     codec_k: int = 32,
     pairs_per_round: int = 64,
     max_rules: int | None = None,
+    builder: str | Builder = "host",
+    build_cfg: BuildConfig | None = None,
 ) -> InvertedIndex:
     lists = [np.asarray(l, dtype=np.int64) for l in lists]
     u = universe or max(int(l[-1]) + 1 for l in lists)
@@ -93,8 +96,23 @@ def build_index(
         repair_input = [l if i not in bitmaps else l[:2]
                         for i, l in enumerate(lists)]
 
-    rep = repair_compress(repair_input, pairs_per_round=pairs_per_round,
-                          max_rules=max_rules)
+    # Re-Pair construction routes through the backend-pluggable build
+    # subsystem (DESIGN.md §3); all backends produce bit-identical
+    # grammars, so the choice is a pure throughput knob.  The legacy
+    # knobs (pairs_per_round/max_rules) only apply when this function
+    # constructs the config itself — refuse conflicting requests rather
+    # than silently prefer one side.
+    knobs_set = pairs_per_round != 64 or max_rules is not None
+    if knobs_set and (build_cfg is not None or isinstance(builder, Builder)):
+        raise ValueError(
+            "pass pairs_per_round/max_rules inside build_cfg (or the "
+            "Builder's own config), not alongside one")
+    if not isinstance(builder, Builder):
+        if build_cfg is None:
+            build_cfg = BuildConfig(pairs_per_round=pairs_per_round,
+                                    max_rules=max_rules)
+        builder = make_builder(builder, build_cfg)
+    rep = builder.build_grammar(repair_input)
     if optimize:
         rep, _ = optimize_rules(rep)
     a_samp = build_a_sampling(rep, a_k)

@@ -1,7 +1,6 @@
-"""Pallas TPU kernels for the query-time hot spots of the Re-Pair index.
-
-Five kernels (each: <name>.py pallas_call + BlockSpec, ops.py jit wrapper,
-ref.py oracle):
+"""Pallas TPU kernels for the hot spots of the Re-Pair index — five on
+the query side, one on the construction side (each: <name>.py
+pallas_call + BlockSpec, ops.py jit wrapper, ref.py oracle):
 
 * ``gap_decode``      — tiled exclusive-carry prefix sum: d-gaps -> doc ids.
 * ``grammar_expand``  — positional phrase expansion via fixed-depth descent;
@@ -17,6 +16,11 @@ ref.py oracle):
                         page scheduling, one stream page per instance —
                         DESIGN.md §2.5); backs ``repro.engine.PallasEngine``
                         and is checked bit-exactly against the jnp engine.
+* ``pair_count``      — the CONSTRUCTION path (DESIGN.md §3.3): tiled
+                        pair histogram over the working sequence with
+                        revisited-block accumulators; backs
+                        ``repro.build.PallasBuilder`` and is checked
+                        bit-exactly against the host pair counter.
 
 All validated on CPU with interpret=True against their refs; BlockSpecs are
 written for TPU v5e VMEM (tiles are multiples of (8, 128) lanes).

@@ -1,0 +1,6 @@
+from .ops import pair_count
+from .pair_count import pair_count_pallas, TILE_K, TILE_N
+from .ref import pair_count_ref
+
+__all__ = ["pair_count", "pair_count_pallas", "pair_count_ref",
+           "TILE_K", "TILE_N"]

@@ -20,14 +20,26 @@ import numpy as np
 
 
 def serve_queries(n_queries: int, engine: str = "jnp",
-                  data_shards: int = 0) -> None:
-    from ..core.repair import repair_compress
+                  data_shards: int = 0, builder: str = "host",
+                  refreshes: int = 0) -> None:
+    from ..build import make_builder
     from ..index import zipf_corpus
     from ..serve.query_serve import QueryServer
 
     corpus = zipf_corpus(num_docs=2000, vocab_size=4000, seed=0)
     lists = corpus.postings()
-    res = repair_compress(lists)
+    n_sym = sum(len(l) for l in lists)
+    # the pallas builder counts against a static candidate table, so give
+    # it the [CN07] capped-counting config its table can hold exactly
+    # (host/jnp accept the same knob; uncapped they count everything)
+    bld = make_builder(builder,
+                       **({"table_cap": 4096} if builder == "pallas"
+                          else {}))
+    t0 = time.perf_counter()
+    res = bld.build_grammar(lists)
+    dt = time.perf_counter() - t0
+    print(f"[{builder}] built {res.grammar.num_rules} rules from "
+          f"{n_sym} symbols in {dt:.2f}s ({n_sym/dt:.0f} sym/s)")
     mesh = None
     if data_shards:
         import jax
@@ -52,6 +64,26 @@ def serve_queries(n_queries: int, engine: str = "jnp",
     for (a, b), got in list(zip(pairs, outs))[::max(len(pairs)//8, 1)]:
         np.testing.assert_array_equal(got, np.intersect1d(lists[a], lists[b]))
     print("spot checks OK")
+
+    # index refresh without restarting: grow the collection, rebuild on
+    # the device builder, hot-swap, keep answering (DESIGN.md §3.4)
+    if refreshes:
+        from ..data.pipeline import PostingsSource
+        src = PostingsSource(base_docs=1000, growth_docs=500, seed=0)
+        for v in range(1, refreshes + 1):
+            new_lists, _ = src.lists_at(v)
+            t0 = time.perf_counter()
+            srv.rebuild(new_lists, builder=bld)   # same config as v0
+            dt = time.perf_counter() - t0
+            n_sym = sum(len(l) for l in new_lists)
+            q = [tuple(map(int, rng.choice(len(new_lists), 2,
+                                           replace=False)))
+                 for _ in range(8)]
+            for (a, b), got in zip(q, srv.and_batch(q)):
+                np.testing.assert_array_equal(
+                    got, np.intersect1d(new_lists[a], new_lists[b]))
+            print(f"refresh v{v}: {len(new_lists)} lists / {n_sym} symbols "
+                  f"rebuilt + swapped in {dt:.2f}s, serving verified")
 
 
 def serve_lm(arch_name: str, n_requests: int) -> None:
@@ -83,12 +115,19 @@ def main() -> None:
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--engine", choices=("host", "jnp", "pallas"),
                     default="jnp")
+    ap.add_argument("--builder", choices=("host", "jnp", "pallas"),
+                    default="host",
+                    help="construction backend (repro.build)")
+    ap.add_argument("--refresh", type=int, default=0,
+                    help="after serving, rebuild+hot-swap the index this "
+                         "many times from a growing PostingsSource")
     ap.add_argument("--data-shards", type=int, default=0,
                     help="shard the index across N devices on a 'data' "
                          "mesh axis (0 = unsharded)")
     args = ap.parse_args()
     if args.tier == "queries":
-        serve_queries(args.n, args.engine, data_shards=args.data_shards)
+        serve_queries(args.n, args.engine, data_shards=args.data_shards,
+                      builder=args.builder, refreshes=args.refresh)
     else:
         serve_lm(args.arch, args.n)
 

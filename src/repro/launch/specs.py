@@ -9,7 +9,7 @@ For every cell this module returns a ``LoweringSpec``:
                       never allocated),
 * ``in_shardings`` / ``out_shardings`` — NamedShardings on the given mesh.
 
-Conventions (DESIGN.md §4):
+Conventions (DESIGN.md §5):
 * batch dims shard over ('pod','data') when present, else 'data';
 * LM params: Megatron TP over 'model' (+ vocab over 'model'); KV caches
   shard the *cache sequence* over 'model' (context-parallel decode);
@@ -114,7 +114,7 @@ def _lm_param_shardings(cfg: T.LMConfig, mesh: Mesh,
     # repeated KV per flash chunk (~60% of the train-shape AG wire).
     # Replicating wk/wv instead computes KV redundantly per shard — 21
     # MB/layer of weights and <1% extra flops for zero KV collectives
-    # (DESIGN.md §4 "KV-head replication").
+    # (DESIGN.md §5 "KV-head replication").
     # measured NEUTRAL at qwen3 train_4k (the partitioner's kv gathers
     # persist either way — §Perf iteration log H7); kept selectable under
     # the explicit "opt-kvrep" variant, off in "opt".

@@ -10,7 +10,7 @@ by batched expert GEMMs, and combined back weighted by their gate.
 Overflowing tokens are dropped (classic Switch behavior; the aux loss
 pushes the router toward balance).
 
-Sharding strategy (DESIGN.md §4): when n_experts %% tp == 0 the E dim of
+Sharding strategy (DESIGN.md §5): when n_experts %% tp == 0 the E dim of
 the dispatch buffer shards over ``model`` (expert parallelism) while G
 shards over ``data`` — each (data, model) device owns its group's tokens
 for its experts, and the only communication is the output all-reduce over
@@ -128,7 +128,7 @@ def moe_ffn_sharded(p: dict, x: jax.Array, *, n_experts: int, top_k: int,
     """shard_map MoE: explicit local dispatch + one psum.  GSPMD cannot
     partition the batched scatter/gather of token dispatch (it all-gathers
     a (G, T·k/G, d) buffer — 32 GiB/device at phi3.5-moe's train shape),
-    so the dispatch is written per-device instead (DESIGN.md §4).
+    so the dispatch is written per-device instead (DESIGN.md §5).
 
     Expert placement: E %% tp == 0 -> expert parallelism (each model shard
     owns E/tp experts); otherwise every shard holds all experts with the

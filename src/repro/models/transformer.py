@@ -14,7 +14,7 @@ backward pass — the standard MaxText recipe).
 
 ``long_500k`` uses the sliding-window attention mode (window 4096) with a
 ring KV cache of window size — the sub-quadratic long-context path
-(DESIGN.md §5).
+(DESIGN.md §6).
 """
 
 from __future__ import annotations

@@ -22,6 +22,15 @@ engines (DESIGN.md §2.5): ``page_size`` controls the paged stream layout
 shard_map dispatch — grammar replicated, stream/spans list-partitioned
 across devices.  Throughput, not per-query latency, is the serving metric
 (DESIGN.md §2 "assumption changes").
+
+**Index refresh without restarting** (DESIGN.md §3.4): ``rebuild(lists)``
+compresses a new postings snapshot through the backend-pluggable build
+subsystem (``repro.build``, default the device ``jnp`` builder), stands
+up a complete replacement engine off to the side, and swaps it in with
+one reference assignment — queries in flight on the old engine finish on
+the old index, the next batch sees the new one.  ``swap_index(res)`` is
+the second half on its own, for builds done elsewhere (e.g. a builder
+running on another host).
 """
 
 from __future__ import annotations
@@ -32,6 +41,7 @@ import numpy as np
 
 from jax.sharding import Mesh
 
+from ..build import BuildConfig, Builder, make_builder
 from ..core.jax_index import DEFAULT_PAGE, FlatIndex, build_flat_index
 from ..core.repair import RePairResult
 from ..engine import DeviceEngine, Engine, make_engine
@@ -43,10 +53,11 @@ class QueryServer:
                  interpret: bool | None = None,
                  page_size: int = DEFAULT_PAGE, paged: bool = False,
                  mesh: Mesh | None = None):
-        self.res = res
         self._B = B
-        self._fi: FlatIndex | None = None
         self.max_short_len = max_short_len
+        # engine construction parameters, kept so rebuild() can stand up
+        # an identical engine over a fresh index
+        self._engine_name = engine
         kwargs: dict = {}
         if engine in ("jnp", "pallas"):
             kwargs = dict(max_short_len=max_short_len, B=B, mesh=mesh,
@@ -55,9 +66,29 @@ class QueryServer:
                 kwargs["interpret"] = interpret
             else:
                 kwargs["paged"] = paged
-        self.engine: Engine = make_engine(engine, res, **kwargs)
-        if isinstance(self.engine, DeviceEngine):
-            self._fi = self.engine.fi
+        self._engine_kwargs = kwargs
+        self.swap_index(res)
+
+    # -- build-then-hot-swap -----------------------------------------------
+
+    def swap_index(self, res: RePairResult) -> None:
+        """Atomically replace the served index: the new engine (and its
+        device arrays) is built COMPLETELY before the single reference
+        swap, so serving never observes a half-built index."""
+        engine = make_engine(self._engine_name, res, **self._engine_kwargs)
+        fi = engine.fi if isinstance(engine, DeviceEngine) else None
+        self.res, self.engine, self._fi = res, engine, fi
+
+    def rebuild(self, lists: Sequence[np.ndarray], *,
+                builder: str | Builder = "jnp",
+                build_cfg: BuildConfig | None = None) -> RePairResult:
+        """Compress a new postings snapshot (device build by default) and
+        hot-swap it in; returns the new compressed result."""
+        if not isinstance(builder, Builder):
+            builder = make_builder(builder, build_cfg)
+        res = builder.build_grammar(lists)
+        self.swap_index(res)
+        return res
 
     @property
     def fi(self) -> FlatIndex:

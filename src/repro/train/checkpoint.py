@@ -1,6 +1,6 @@
 """Fault-tolerant checkpoint manager.
 
-Requirements at 1000+ node scale (DESIGN.md §4):
+Requirements at 1000+ node scale (DESIGN.md §5):
 
 * **atomic** — a checkpoint is never observable half-written: we write to
   ``step_<n>.tmp/`` and ``os.rename`` to ``step_<n>/`` (rename is atomic on

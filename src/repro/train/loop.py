@@ -5,7 +5,7 @@ and wires AdamW, gradient clipping, optional cross-pod int8 gradient
 compression, periodic checkpointing (atomic + versioned, with the data
 cursor inside), and crash-exact resume.
 
-Fault-tolerance contract (DESIGN.md §4):
+Fault-tolerance contract (DESIGN.md §5):
 * ``run()`` always starts by probing the checkpoint directory; if a
   complete checkpoint exists it restores params/opt state/data cursor and
   continues — a preempted job restarted by the cluster scheduler loses at

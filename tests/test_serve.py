@@ -81,3 +81,48 @@ def test_randomize_lists_preserves_lengths():
     for b in rnd:
         assert (np.diff(b) > 0).all()
         assert b[-1] < corpus.num_docs
+
+
+def test_query_server_rebuild_hot_swap():
+    """Build-then-hot-swap (DESIGN.md §3.4): a QueryServer rebuilt from a
+    grown PostingsSource snapshot keeps serving, with answers correct
+    against the NEW collection — for both host and device builders."""
+    from repro.core.repair import repair_compress
+    from repro.data.pipeline import PostingsSource
+    from repro.serve.query_serve import QueryServer
+
+    src = PostingsSource(base_docs=120, growth_docs=60, vocab=300, seed=3)
+    lists0, _ = src.lists_at(0)
+    srv = QueryServer(repair_compress(lists0), engine="jnp")
+    rng = np.random.default_rng(0)
+
+    def check(lists):
+        pairs = [tuple(map(int, rng.choice(len(lists), 2, replace=False)))
+                 for _ in range(6)]
+        for (a, b), got in zip(pairs, srv.and_batch(pairs)):
+            np.testing.assert_array_equal(
+                got, np.intersect1d(lists[a], lists[b]))
+
+    check(lists0)
+    old_engine = srv.engine
+    lists1, _ = src.lists_at(1)
+    res1 = srv.rebuild(lists1, builder="jnp")
+    assert srv.engine is not old_engine
+    assert srv.res is res1
+    assert len(lists1) > len(lists0)
+    check(lists1)
+    # swap back to the v0 snapshot through swap_index directly
+    srv.swap_index(repair_compress(lists0))
+    check(lists0)
+
+
+def test_postings_source_is_pure():
+    from repro.data.pipeline import PostingsSource
+
+    src = PostingsSource(base_docs=80, growth_docs=40, vocab=200, seed=5)
+    a, ua = src.lists_at(2)
+    b, ub = src.lists_at(2)
+    assert ua == ub == src.num_docs_at(2)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
