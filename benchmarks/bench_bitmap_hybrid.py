@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.engine import DeviceEngine, make_engine, validate_engines
 from repro.index.builder import build_index
-from repro.index.query import QueryEngine
+from repro.query.legacy import LegacyQueryEngine as QueryEngine
 
 from .common import corpus_lists, emit, time_us
 

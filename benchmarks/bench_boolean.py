@@ -1,0 +1,91 @@
+"""Boolean-query workload: per-algorithm × per-engine throughput
+(DESIGN.md §7.4).
+
+A Zipf-distributed boolean/phrase query stream (``common.boolean_workload``)
+is planned and executed through ``repro.query.QueryExecutor`` over every
+engine backend, once with the cost model free to choose ("planner") and
+once per pinned intersection algorithm (merge / svs / bys / meld) — the
+§5-style comparison the paper runs across "various list intersection
+algorithms", here with the engine tier as a second axis.  Every result is
+oracle-checked before timing, so a qps number can never come from a wrong
+answer.
+
+  PYTHONPATH=src python -m benchmarks.run --only boolean
+  PYTHONPATH=src python -m benchmarks.bench_boolean --engine host,jnp
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.jax_index import build_flat_index
+from repro.core.repair import repair_compress
+from repro.engine import make_engine, validate_engines
+from repro.query import QueryExecutor, naive_eval
+
+from .common import BENCH_SEED, boolean_workload, corpus_lists, emit
+
+DEFAULT_ENGINES = ("host", "jnp", "pallas")
+ALGO_AXIS = (None, "merge", "svs", "bys", "meld")   # None = planner's pick
+
+CORPUS = dict(num_docs=600, vocab_size=1500, mean_doc_len=60)
+
+
+def run(engines=DEFAULT_ENGINES, n_queries=24) -> list[dict]:
+    lists, num_docs = corpus_lists(**CORPUS)
+    res = repair_compress(lists)
+    fi = build_flat_index(res)
+    queries = boolean_workload(len(lists), [len(l) for l in lists],
+                               n_queries=n_queries)
+    oracle = [naive_eval(q, lists, res.universe) for q in queries]
+
+    rows = []
+    for name in engines:
+        kwargs = {"fi": fi} if name in ("jnp", "pallas") else {}
+        eng = make_engine(name, res, **kwargs)
+        for algo in ALGO_AXIS:
+            qx = QueryExecutor(eng, force_algo=algo)
+            plans = [qx.plan(q) for q in queries]
+            used = set().union(*(p.algos() for p in plans))
+            hits = 0
+            for q, p, want in zip(queries, plans, oracle):
+                got = qx.run_plan(p)        # warmup (jit) + oracle gate
+                np.testing.assert_array_equal(got, want)
+                hits += got.size
+            t0 = time.perf_counter()
+            for p in plans:
+                qx.run_plan(p)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "engine": name,
+                "algo": algo or "planner",
+                "algos_used": ",".join(sorted(used - {"seed"})) or "none",
+                "n_queries": len(queries),
+                "qps": len(queries) / dt,
+                "us_per_query": 1e6 * dt / len(queries),
+                "hits": int(hits),
+            })
+            emit(rows[-1:], f"{name} × {algo or 'planner'}")
+    return rows
+
+
+def main(engines=DEFAULT_ENGINES, n_queries=24) -> dict:
+    validate_engines(engines)
+    rows = run(engines, n_queries)
+    return {
+        "seed": BENCH_SEED,
+        "corpus": CORPUS,
+        "rows": rows,
+        "qps": {f"{r['engine']}/{r['algo']}": r["qps"] for r in rows},
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", type=str, default=",".join(DEFAULT_ENGINES))
+    ap.add_argument("--n", type=int, default=24)
+    args = ap.parse_args()
+    main(engines=tuple(args.engine.split(",")), n_queries=args.n)

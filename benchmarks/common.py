@@ -40,6 +40,51 @@ def corpus_lists(num_docs=2000, vocab_size=5000, mean_doc_len=120,
     return _CACHE[key]
 
 
+def boolean_workload(num_lists, lengths, n_queries=64, seed=None,
+                     max_terms=4, p_or=0.2, p_not=0.12, p_phrase=0.12,
+                     zipf_s=1.1):
+    """Zipf-distributed boolean/phrase query stream over ``num_lists``
+    postings lists (DESIGN.md §7.4).
+
+    Term draws follow a Zipf law over the POPULARITY ranking (longer list =
+    more frequent term = more often queried), matching how real query logs
+    hit the head of the vocabulary.  Query shapes: k-term AND (k in
+    [2, max_terms]), OR of two ANDs, AND with one negated term, and
+    adjacent-term phrases.  Returns a list of AST nodes; a pure function of
+    the arguments (``seed=None`` means the run-wide ``BENCH_SEED``).
+    """
+    from repro.query.ast import And, Not, Or, Phrase, Term
+
+    rng = np.random.default_rng(BENCH_SEED if seed is None else seed)
+    order = np.argsort(-np.asarray(lengths))         # popularity ranking
+    p = np.arange(1, num_lists + 1, dtype=np.float64) ** (-zipf_s)
+    p /= p.sum()
+
+    def draw_terms(k):
+        ranks = rng.choice(num_lists, size=k, replace=False, p=p)
+        return [int(order[r]) for r in ranks]
+
+    out = []
+    for _ in range(n_queries):
+        u = rng.random()
+        k = int(rng.integers(2, max_terms + 1))
+        if u < p_phrase:
+            t0 = int(order[rng.choice(num_lists, p=p)])
+            out.append(Phrase(tuple(min(t0 + j, num_lists - 1)
+                                    for j in range(k))))
+        elif u < p_phrase + p_not:
+            ts = draw_terms(k)
+            out.append(And(tuple([Term(t) for t in ts[:-1]]
+                                 + [Not(Term(ts[-1]))])))
+        elif u < p_phrase + p_not + p_or:
+            a, b = draw_terms(2), draw_terms(2)
+            out.append(Or((And((Term(a[0]), Term(a[1]))),
+                           And((Term(b[0]), Term(b[1]))))))
+        else:
+            out.append(And(tuple(Term(t) for t in draw_terms(k))))
+    return out
+
+
 def time_us(fn, *args, repeat=3, number=20) -> float:
     """Median-of-repeat mean μs per call."""
     best = []

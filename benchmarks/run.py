@@ -23,6 +23,7 @@ BENCHES = {
     "build": "benchmarks.bench_build",
     "heights": "benchmarks.bench_heights",
     "fig3": "benchmarks.bench_intersection",
+    "boolean": "benchmarks.bench_boolean",
     "fig4": "benchmarks.bench_tradeoff",
     "hybrid": "benchmarks.bench_bitmap_hybrid",
     "optimize": "benchmarks.bench_optimize",

@@ -9,7 +9,7 @@ import numpy as np
 from repro.build import make_builder
 from repro.core.dictionary import build_forest
 from repro.index import build_index, zipf_corpus
-from repro.index.query import QueryEngine
+from repro.query.legacy import LegacyQueryEngine as QueryEngine
 
 
 def main() -> None:

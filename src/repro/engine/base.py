@@ -43,6 +43,7 @@ class Engine(abc.ABC):
     def __init__(self, res: RePairResult):
         self.res = res
         self.lengths = np.asarray(res.orig_lengths, dtype=np.int64)
+        self._decoded: dict[int, np.ndarray] = {}
 
     # -- point operations ---------------------------------------------------
 
@@ -54,6 +55,45 @@ class Engine(abc.ABC):
     def member_batch(self, list_ids: np.ndarray, xs: np.ndarray) -> np.ndarray:
         return self.next_geq_batch(list_ids, xs) == np.asarray(xs)
 
+    def next_geq_bys_batch(self, list_ids: np.ndarray,
+                           xs: np.ndarray) -> np.ndarray:
+        """Batched Baeza-Yates-style binary-search next_geq [BY04].  The
+        base implementation bisects the DECODED list (the classic
+        uncompressed baseline); device engines override it with a
+        positional bisection of the compressed stream's phrase-sum prefix
+        table (``jnp_backend.next_geq_bys_batch``).  Same contract as
+        ``next_geq_batch``: (Q,) int32, INT_INF where no element >= x."""
+        lids = np.asarray(list_ids)
+        xq = np.asarray(xs, np.int64)
+        out = np.full(lids.shape, int(INT_INF), dtype=np.int64)
+        for li in np.unique(lids):
+            arr = self.decode_list(int(li))
+            m = lids == li
+            pos = np.searchsorted(arr, xq[m])
+            hit = pos < arr.size
+            out[m] = np.where(hit, arr[np.minimum(pos, arr.size - 1)],
+                              int(INT_INF))
+        return out.astype(np.int32)
+
+    # -- whole-list decode ---------------------------------------------------
+
+    def decode_list(self, i: int) -> np.ndarray:
+        """Full expansion of one list to sorted int64 doc ids (cached —
+        the boolean executor's merge/union/complement operands).  The
+        cached array is returned by reference and frozen: an accidental
+        in-place mutation by a caller raises instead of silently
+        corrupting every later query that touches the list."""
+        i = int(i)
+        out = self._decoded.get(i)
+        if out is None:
+            out = self._decode_list(i)
+            out.flags.writeable = False
+            self._decoded[i] = out
+        return out
+
+    def _decode_list(self, i: int) -> np.ndarray:
+        return self.res.decode_list(i)
+
     # -- conjunctive queries ------------------------------------------------
 
     @abc.abstractmethod
@@ -64,6 +104,37 @@ class Engine(abc.ABC):
     @abc.abstractmethod
     def intersect_multi(self, idxs: Sequence[int]) -> np.ndarray:
         """One k-term AND query; sorted int64 id array."""
+
+    def intersect_multi_meld(self, idxs: Sequence[int]) -> np.ndarray:
+        """One k-term AND by **adaptive melding** (Barbay–Kenyon style):
+        all k cursors chase a common frontier — one batched ``next_geq``
+        round advances every list to the current candidate, the maximum
+        answer becomes the next candidate, agreement emits an element.
+        O(k · alternation) probe rounds, each a single engine batch, so
+        the same driver melds on host, device, and the sharded dispatch
+        path.  Backend-generic: implemented purely over
+        ``next_geq_batch``."""
+        idxs = [int(i) for i in idxs]
+        if not idxs:
+            return np.empty(0, dtype=np.int64)
+        if len(idxs) == 1:
+            return self.decode_list(idxs[0]).copy()  # never alias the cache
+        lids = np.asarray(idxs, dtype=np.int32)
+        inf = int(INT_INF)
+        out: list[int] = []
+        x = 0
+        while True:
+            vals = np.asarray(self.next_geq_batch(
+                lids, np.full(lids.size, x, dtype=np.int32)), np.int64)
+            m = int(vals.max())
+            if m >= inf:        # some list is exhausted — no more matches
+                break
+            if int(vals.min()) == m:
+                out.append(m)
+                x = m + 1
+            else:
+                x = m
+        return np.asarray(out, dtype=np.int64)
 
     # -- helpers shared by the backends -------------------------------------
 

@@ -181,6 +181,7 @@ class DeviceEngine(Engine):
         self._fallback = fallback
         self.mesh = mesh
         self._sharded_next_geq = None
+        self._bys_incl = None   # [BY04] prefix table, built on first bys
         if mesh is not None and mesh_axis in mesh.axis_names:
             self._sharded_next_geq = make_sharded_next_geq(
                 self.fi, mesh, mesh_axis)
@@ -218,6 +219,34 @@ class DeviceEngine(Engine):
         if self._sharded_next_geq is not None:
             return np.asarray(self._sharded_next_geq(lids, xq))
         return np.asarray(self._next_geq_dev(lids, xq))
+
+    def next_geq_bys_batch(self, list_ids: np.ndarray,
+                           xs: np.ndarray) -> np.ndarray:
+        """Device binary-search path: bisect the span's phrase-sum prefix
+        table, then one grammar descent (``jnp_backend.next_geq_bys_batch``).
+        Replicated (never shard_map-dispatched): the prefix table is an
+        index-global auxiliary array."""
+        if self._bys_incl is None:
+            self._bys_incl = J.build_bys_table(self.fi)
+        return np.asarray(J.next_geq_bys_batch(
+            self.fi, self._bys_incl, jnp.asarray(list_ids, jnp.int32),
+            jnp.asarray(xs, jnp.int32)))
+
+    #: device expansion cap for whole-list decode; beyond it the host
+    #: reference decodes (one-off outliers, same routing idea as
+    #: ``max_short_len``)
+    _DECODE_CAP = 8192
+
+    def _decode_list(self, i: int) -> np.ndarray:
+        """Whole-list decode via the device positional-descent expansion.
+        The static ``max_len`` is the length rounded up to a power of two,
+        so jit entries stay O(log max-length) rather than one per length."""
+        n = int(self.lengths[i])
+        if n > self._DECODE_CAP:
+            return super()._decode_list(i)
+        bucket = max(16, 1 << (max(1, n - 1)).bit_length())
+        row = J.expand_batch(self.fi, jnp.asarray([i], jnp.int32), bucket)
+        return self.compact(np.asarray(row[0]))
 
     def intersect_pairs(self, pairs: Sequence[tuple[int, int]]
                         ) -> list[np.ndarray]:

@@ -186,6 +186,83 @@ def probe_batch_paged(pi: PagedIndex, long_ids: jax.Array,
     return jax.vmap(one)(long_ids, xs)
 
 
+def build_bys_table(fi: FlatIndex) -> jnp.ndarray:
+    """Phrase-sum prefix table for the batched binary-search path:
+    ``incl[pos]`` = absolute value of the LAST element expanded by the
+    stream symbol at ``pos`` (strictly increasing within each list span,
+    because gaps are positive).  One (N,) int32 array aligned with
+    ``fi.c``, built once per index on host — the auxiliary [BY04]
+    structure, deliberately OUTSIDE FlatIndex so the pytree/sharding
+    layout is untouched."""
+    import numpy as np
+    c = np.asarray(fi.c)
+    starts = np.asarray(fi.starts, np.int64)
+    firsts = np.asarray(fi.firsts, np.int64)
+    cs = np.cumsum(np.asarray(fi.sym_sum, np.int64)[c])
+    span_lens = np.diff(starts)
+    # per-position offset so each span's cumsum restarts at its first value
+    before = np.where(starts[:-1] > 0, cs[np.maximum(starts[:-1] - 1, 0)], 0)
+    offset = np.repeat(firsts - before, span_lens)
+    return jnp.asarray((cs + offset).astype(np.int32))
+
+
+def _next_geq_bys_one(fi: FlatIndex, incl: jax.Array, list_id: jax.Array,
+                      x: jax.Array) -> jax.Array:
+    """Binary-search twin of :func:`_next_geq_one` ([BY04] / the "bys"
+    planner algorithm): lower-bound the span's phrase-sum prefix table
+    (32 fixed bisection steps — the span fits int32), then one fixed-depth
+    descent inside the halting phrase.  Searches the COMPRESSED domain:
+    log2(span symbols), not log2(elements)."""
+    T = fi.num_terminals
+    start = fi.starts[list_id]
+    end = fi.starts[list_id + 1]
+    first = fi.firsts[list_id]
+    last = fi.lasts[list_id]
+    N = incl.shape[0]
+
+    def bisect(_, lh):
+        lo, hi = lh
+        done = lo >= hi
+        mid = (lo + hi) // 2
+        ge = incl[jnp.minimum(mid, N - 1)] >= x
+        nlo = jnp.where(ge, lo, mid + 1)
+        nhi = jnp.where(ge, mid, hi)
+        return (jnp.where(done, lo, nlo), jnp.where(done, hi, nhi))
+
+    pos, _ = jax.lax.fori_loop(0, 32, bisect, (start, end))
+    s = jnp.where(pos == start, first,
+                  incl[jnp.minimum(jnp.maximum(pos - 1, 0), N - 1)])
+    sym0 = fi.c[jnp.minimum(pos, fi.c.shape[0] - 1)]
+
+    def descend_body(_, state):
+        sym, s = state
+        is_rule = sym >= T
+        l = jnp.where(is_rule, fi.sym_left[sym], sym)
+        r = jnp.where(is_rule, fi.sym_right[sym], sym)
+        ls = fi.sym_sum[l]
+        go_left = s + ls >= x
+        new_sym = jnp.where(go_left, l, r)
+        new_s = jnp.where(go_left, s, s + ls)
+        return (jnp.where(is_rule, new_sym, sym),
+                jnp.where(is_rule, new_s, s))
+
+    sym_f, s_f = jax.lax.fori_loop(0, fi.max_depth, descend_body, (sym0, s))
+    answer = s_f + fi.sym_sum[sym_f]
+
+    out = jnp.where(pos >= end, INT_INF, answer)
+    out = jnp.where(x <= first, first, out)   # the head answers (even when
+    out = jnp.where(x > last, INT_INF, out)   # the span is empty)
+    return out.astype(jnp.int32)
+
+
+@jax.jit
+def next_geq_bys_batch(fi: FlatIndex, incl: jax.Array, list_ids: jax.Array,
+                       xs: jax.Array) -> jax.Array:
+    """Batched binary-search next_geq — same contract as
+    :func:`next_geq_batch`, different algorithm (the planner's "bys")."""
+    return jax.vmap(partial(_next_geq_bys_one, fi, incl))(list_ids, xs)
+
+
 @jax.jit
 def member_batch(fi: FlatIndex, list_ids: jax.Array,
                  xs: jax.Array) -> jax.Array:

@@ -21,7 +21,7 @@ import numpy as np
 
 def serve_queries(n_queries: int, engine: str = "jnp",
                   data_shards: int = 0, builder: str = "host",
-                  refreshes: int = 0) -> None:
+                  refreshes: int = 0, query: str | None = None) -> None:
     from ..build import make_builder
     from ..index import zipf_corpus
     from ..serve.query_serve import QueryServer
@@ -64,6 +64,19 @@ def serve_queries(n_queries: int, engine: str = "jnp",
     for (a, b), got in list(zip(pairs, outs))[::max(len(pairs)//8, 1)]:
         np.testing.assert_array_equal(got, np.intersect1d(lists[a], lists[b]))
     print("spot checks OK")
+
+    # boolean queries through the cost-based planner (DESIGN.md §7):
+    # --query '(12 AND 40) OR NOT 7' — term ids address postings lists
+    if query is not None:
+        from ..query import naive_eval
+        print(f"\nquery: {query}\nplan:\n{srv.explain(query)}")
+        t0 = time.perf_counter()
+        hits = srv.search(query)
+        dt = time.perf_counter() - t0
+        np.testing.assert_array_equal(
+            hits, naive_eval(srv.plan(query).node, lists, res.universe))
+        print(f"{hits.size} hits in {dt*1e3:.1f} ms (oracle-verified); "
+              f"first 10: {hits[:10].tolist()}")
 
     # index refresh without restarting: grow the collection, rebuild on
     # the device builder, hot-swap, keep answering (DESIGN.md §3.4)
@@ -124,10 +137,14 @@ def main() -> None:
     ap.add_argument("--data-shards", type=int, default=0,
                     help="shard the index across N devices on a 'data' "
                          "mesh axis (0 = unsharded)")
+    ap.add_argument("--query", default=None,
+                    help="boolean query string to plan + execute, e.g. "
+                         "'(12 AND 40) OR NOT 7' or '\"3 4 5\"'")
     args = ap.parse_args()
     if args.tier == "queries":
         serve_queries(args.n, args.engine, data_shards=args.data_shards,
-                      builder=args.builder, refreshes=args.refresh)
+                      builder=args.builder, refreshes=args.refresh,
+                      query=args.query)
     else:
         serve_lm(args.arch, args.n)
 

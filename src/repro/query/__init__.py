@@ -1,0 +1,30 @@
+"""Boolean query subsystem (DESIGN.md §7).
+
+An AST (``Term``/``And``/``Or``/``Not``/``Phrase``), a query-string
+parser, a cost-based planner that picks an intersection algorithm per
+conjunctive step (merge / svs skip / Baeza-Yates binary search / k-way
+adaptive melding), and an executor that lowers the plan onto the
+backend-pluggable Engine API — so the same query runs on HostEngine,
+JnpEngine (flat and paged), and PallasEngine, including the sharded
+dispatch path.
+
+    from repro.query import QueryExecutor, parse
+    qx = QueryExecutor(make_engine("jnp", res))
+    qx.search('(12 AND 40) OR NOT 7')
+    qx.search(And((Term(12), Term(40), Term(3))))   # AST directly
+
+The differential gate (``tests/test_query_plan.py``) holds every planner
+choice to bit-identical agreement with a naive set-algebra oracle across
+all engines × layouts.
+"""
+
+from .ast import And, Node, Not, Or, Phrase, Term, terms_of, to_str, walk
+from .exec import QueryExecutor, naive_eval
+from .parser import QueryParseError, parse
+from .plan import ALGOS, ListStats, PlanNode, explain, make_plan
+
+__all__ = [
+    "And", "Node", "Not", "Or", "Phrase", "Term", "terms_of", "to_str",
+    "walk", "QueryExecutor", "naive_eval", "QueryParseError", "parse",
+    "ALGOS", "ListStats", "PlanNode", "explain", "make_plan",
+]

@@ -1,0 +1,220 @@
+"""Plan executor: lowers a :class:`~repro.query.plan.PlanNode` tree onto
+the backend-pluggable Engine API (DESIGN.md §7.3).
+
+Every node materializes to a sorted unique int64 doc-id array; the
+conjunctive steps are where the engines earn their keep:
+
+* ``svs`` steps stream the candidate set through ``engine.next_geq_batch``
+  — one batched probe round per step, which is the bucket+skip kernel on
+  the device engines (and the shard_map dispatch when the engine carries a
+  mesh);
+* ``bys`` steps go through ``engine.next_geq_bys_batch``, the batched
+  binary-search primitive;
+* ``meld`` conjunctions run ``engine.intersect_multi_meld`` — k cursors
+  advanced to a common frontier in batched rounds;
+* ``merge`` steps decode through ``engine.decode_list`` and intersect on
+  host.
+
+Two index shapes are supported:
+
+* **document-level** (default): term ids address doc-id lists; ``Phrase``
+  degrades to its conjunction (the two-level AND-then-verify skeleton of
+  the paper's introduction — verification needs positions we don't have).
+* **positional** (``positional=stride``): term ids address position lists
+  (doc * stride + offset, cf. ``index/positional.py``).  ``Term``/boolean
+  ops project positions onto documents; ``Phrase`` intersects *shifted*
+  position lists with per-step svs/bys probes — "phrase queries can be
+  solved essentially by intersecting word positions" (paper §1) — and
+  drops windows that would straddle a document boundary.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.jax_index import INT_INF
+from .ast import Node, Phrase, Term
+from .parser import parse
+from .plan import ListStats, PlanNode, make_plan
+
+_EMPTY = np.empty(0, dtype=np.int64)
+
+
+class QueryExecutor:
+    """Bind a planner to one engine.
+
+    ``force_algo`` pins every conjunctive step ("merge"/"svs"/"bys"/
+    "meld") — the benchmark and differential-test axis.  ``domain`` is the
+    document-id domain for ``Not`` (default: the index universe, or
+    ``positions_universe // stride`` for positional indexes).
+    """
+
+    def __init__(self, engine, *, domain: int | None = None,
+                 force_algo: str | None = None,
+                 positional: int | None = None,
+                 term_map: dict[str, int] | None = None, B: int = 8):
+        self.engine = engine
+        self.stride = positional
+        if positional is not None and domain is None:
+            domain = -(-engine.res.universe // positional)  # ceil
+        self.stats = ListStats.from_engine(engine, B=B, domain=domain)
+        self.force_algo = force_algo
+        self.term_map = term_map
+
+    # -- public API ----------------------------------------------------------
+
+    def search(self, q: str | Node) -> np.ndarray:
+        return self.run_plan(self.plan(q))
+
+    def plan(self, q: str | Node) -> PlanNode:
+        node = parse(q, self.term_map) if isinstance(q, str) else q
+        return make_plan(node, self.stats, self.force_algo,
+                         probe_terms=self.stride is None)
+
+    def run_plan(self, plan: PlanNode) -> np.ndarray:
+        out = np.asarray(self._run(plan), dtype=np.int64)
+        # bare-Term plans alias the engine's frozen decode cache; hand the
+        # caller a writable array without copying on the common paths
+        return out if out.flags.writeable else out.copy()
+
+    # -- evaluation ----------------------------------------------------------
+
+    def _term_docs(self, t: int) -> np.ndarray:
+        if not self.stats.valid(t):
+            return _EMPTY
+        arr = self.engine.decode_list(t)
+        if self.stride is not None:
+            return np.unique(arr // self.stride)
+        return arr
+
+    def _probe_keep(self, t: int, probes: np.ndarray,
+                    algo: str) -> np.ndarray:
+        """Boolean membership of ``probes`` in list ``t`` via the chosen
+        engine primitive."""
+        if probes.size == 0:
+            return np.zeros(0, dtype=bool)
+        if not self.stats.valid(t):
+            return np.zeros(probes.size, dtype=bool)
+        lids = np.full(probes.size, t, dtype=np.int32)
+        xs = probes.astype(np.int32)
+        if algo == "bys":
+            vals = self.engine.next_geq_bys_batch(lids, xs)
+        else:
+            vals = self.engine.next_geq_batch(lids, xs)
+        return np.asarray(vals, np.int64) == probes
+
+    def _run(self, p: PlanNode) -> np.ndarray:
+        if p.op == "term":
+            return self._term_docs(p.node.t)
+        if p.op == "not":
+            child = self._run(p.children[0])
+            return np.setdiff1d(np.arange(self.stats.domain, dtype=np.int64),
+                                child, assume_unique=True)
+        if p.op == "or":
+            out = _EMPTY
+            for c in p.children:
+                out = np.union1d(out, self._run(c))
+            return out
+        if p.op == "phrase" and self.stride is not None:
+            return self._phrase_positional(p)
+        # and / doc-level phrase (conjunction skeleton)
+        if p.meld:
+            ts = [c.node.t for c in p.children]
+            if not all(self.stats.valid(t) for t in ts):
+                return _EMPTY
+            return np.asarray(self.engine.intersect_multi_meld(ts),
+                              np.int64)
+        return self._conjunction(p)
+
+    def _conjunction(self, p: PlanNode) -> np.ndarray:
+        assert p.steps, "conjunction without lowering steps"
+        cand = self._run(p.children[p.steps[0][0]])
+        for pos, algo in p.steps[1:]:
+            if cand.size == 0:
+                break
+            child = p.children[pos]
+            # probe steps need a compressed list on the right AND doc-level
+            # addressing (positional lists hold positions, not docs)
+            if (child.op == "term" and self.stride is None
+                    and algo in ("svs", "bys")):
+                cand = cand[self._probe_keep(child.node.t, cand, algo)]
+            else:
+                cand = np.intersect1d(cand, self._run(child),
+                                      assume_unique=True)
+        return cand
+
+    def _phrase_positional(self, p: PlanNode) -> np.ndarray:
+        """Intersect shifted position lists; each step probes the
+        candidate phrase-start positions shifted to that term's offset."""
+        node: Phrase = p.node
+        k = len(node.terms)
+        seed_off = p.steps[0][0]
+        seed = self._positions(node.terms[seed_off])
+        cand = seed - seed_off                     # phrase-start positions
+        cand = cand[cand >= 0]
+        for pos, algo in p.steps[1:]:
+            if cand.size == 0:
+                break
+            t = node.terms[pos]
+            probes = cand + pos
+            if algo == "merge" or not self.stats.valid(t):
+                keep = np.isin(probes, self._positions(t),
+                               assume_unique=True)
+            else:
+                keep = self._probe_keep(t, probes, algo)
+            cand = cand[keep]
+        # a phrase window must not straddle a document boundary
+        ok = (cand % self.stride) + k <= self.stride
+        return np.unique(cand[ok] // self.stride)
+
+    def _positions(self, t: int) -> np.ndarray:
+        return (self.engine.decode_list(t) if self.stats.valid(t)
+                else _EMPTY)
+
+
+def naive_eval(node: Node, lists: list[np.ndarray], domain: int,
+               stride: int | None = None) -> np.ndarray:
+    """The differential oracle: pure numpy set algebra over the RAW
+    postings lists (no grammar, no engine, no planner).  Phrase semantics
+    mirror the executor: positional window intersection when ``stride`` is
+    given, conjunction otherwise."""
+    from .ast import And, Not, Or  # local: avoid polluting module surface
+
+    def docs(t: int) -> np.ndarray:
+        if not (0 <= t < len(lists)):
+            return _EMPTY
+        arr = np.asarray(lists[t], np.int64)
+        return np.unique(arr // stride) if stride is not None else arr
+
+    if isinstance(node, Term):
+        return docs(node.t)
+    if isinstance(node, Not):
+        return np.setdiff1d(np.arange(domain, dtype=np.int64),
+                            naive_eval(node.child, lists, domain, stride),
+                            assume_unique=True)
+    if isinstance(node, Or):
+        out = _EMPTY
+        for c in node.children:
+            out = np.union1d(out, naive_eval(c, lists, domain, stride))
+        return out
+    if isinstance(node, And):
+        out = None
+        for c in node.children:
+            r = naive_eval(c, lists, domain, stride)
+            out = r if out is None else np.intersect1d(out, r,
+                                                       assume_unique=True)
+        return out if out is not None else _EMPTY
+    if isinstance(node, Phrase):
+        if stride is None:
+            return naive_eval(And(tuple(Term(t) for t in node.terms)),
+                              lists, domain)
+        cand = None
+        for off, t in enumerate(node.terms):
+            if not (0 <= t < len(lists)):
+                return _EMPTY
+            starts = np.asarray(lists[t], np.int64) - off
+            starts = starts[starts >= 0]
+            cand = starts if cand is None else np.intersect1d(cand, starts)
+        ok = (cand % stride) + len(node.terms) <= stride
+        return np.unique(cand[ok] // stride)
+    raise TypeError(f"not a query node: {node!r}")

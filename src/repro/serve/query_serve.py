@@ -45,6 +45,8 @@ from ..build import BuildConfig, Builder, make_builder
 from ..core.jax_index import DEFAULT_PAGE, FlatIndex, build_flat_index
 from ..core.repair import RePairResult
 from ..engine import DeviceEngine, Engine, make_engine
+from ..query import Node, PlanNode, QueryExecutor
+from ..query.plan import explain as explain_plan
 
 
 class QueryServer:
@@ -78,6 +80,7 @@ class QueryServer:
         engine = make_engine(self._engine_name, res, **self._engine_kwargs)
         fi = engine.fi if isinstance(engine, DeviceEngine) else None
         self.res, self.engine, self._fi = res, engine, fi
+        self._executor = None   # planner stats are per-index
 
     def rebuild(self, lists: Sequence[np.ndarray], *,
                 builder: str | Builder = "jnp",
@@ -120,3 +123,30 @@ class QueryServer:
         each runs as device-side pairwise svs, shortest list first by
         uncompressed length — the [BLOL06] order the paper adopts in §3.3."""
         return [self.engine.intersect_multi(list(q)) for q in queries]
+
+    # -- boolean queries (repro.query planner, DESIGN.md §7) ----------------
+
+    @property
+    def executor(self) -> QueryExecutor:
+        """Cost-based boolean planner bound to the live engine; rebuilt on
+        every index swap (the plans read per-list statistics)."""
+        if self._executor is None:
+            self._executor = QueryExecutor(self.engine)
+        return self._executor
+
+    def search(self, q: str | Node,
+               force_algo: str | None = None) -> np.ndarray:
+        """Evaluate a boolean query — an AST node or a query string like
+        ``'(12 AND 40) OR NOT 7'`` — through the planner + engine seam.
+        ``force_algo`` pins every conjunctive step ("merge"/"svs"/"bys"/
+        "meld"); default lets the cost model choose per step."""
+        if force_algo is None:
+            return self.executor.search(q)
+        return QueryExecutor(self.engine, force_algo=force_algo).search(q)
+
+    def plan(self, q: str | Node) -> PlanNode:
+        return self.executor.plan(q)
+
+    def explain(self, q: str | Node) -> str:
+        """Human-readable physical plan for a query."""
+        return explain_plan(self.executor.plan(q))

@@ -1,29 +1,18 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the real
-single CPU device (the 512-device override is dryrun.py-only)."""
+single CPU device (the 512-device override is dryrun.py-only).
+
+Corpus/AST generators live in ``tests/strategies.py`` (shared with the
+hypothesis property suites); this module only binds them to fixtures."""
 
 import numpy as np
 import pytest
+
+from strategies import make_lists
 
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(12345)
-
-
-def make_lists(rng, n_lists=30, universe=4000, min_len=5, max_len=600):
-    """Synthetic posting lists with correlated structure (some lists share
-    documents, mimicking topical co-occurrence)."""
-    lists = []
-    hot = np.sort(rng.choice(universe, size=universe // 4, replace=False))
-    for i in range(n_lists):
-        ln = int(rng.integers(min_len, max_len))
-        if i % 3 == 0:  # correlated list: drawn mostly from the hot set
-            k = min(ln, hot.size)
-            base = rng.choice(hot, size=k, replace=False)
-        else:
-            base = rng.choice(universe, size=ln, replace=False)
-        lists.append(np.unique(base.astype(np.int64)))
-    return lists
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,146 @@
+"""Shared test-data generators.
+
+One home for the corpus/postings/AST generators that used to be
+copy-pasted across test modules:
+
+* plain-numpy generators (always available): ``make_lists`` (the conftest
+  corpus), ``small_lists`` (the build-parity corpus), ``adversarial_lists``
+  (randomized lists + the engine edge-case shapes), ``random_ast`` (seeded
+  boolean query trees for the differential gate's no-hypothesis fallback);
+* hypothesis strategies (guarded — ``hypothesis`` is an optional dev
+  dependency): ``posting_lists`` and the recursive ``query_asts``.
+
+Import the numpy generators directly; check ``HAVE_HYPOTHESIS`` (or let
+``pytest.importorskip("hypothesis")`` run first) before touching the
+strategies.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+try:
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # tier-1 must stay green on a bare interpreter
+    st = None
+    HAVE_HYPOTHESIS = False
+
+
+# -- plain numpy generators ---------------------------------------------------
+
+def make_lists(rng, n_lists=30, universe=4000, min_len=5, max_len=600):
+    """Synthetic posting lists with correlated structure (some lists share
+    documents, mimicking topical co-occurrence)."""
+    lists = []
+    hot = np.sort(rng.choice(universe, size=universe // 4, replace=False))
+    for i in range(n_lists):
+        ln = int(rng.integers(min_len, max_len))
+        if i % 3 == 0:  # correlated list: drawn mostly from the hot set
+            k = min(ln, hot.size)
+            base = rng.choice(hot, size=k, replace=False)
+        else:
+            base = rng.choice(universe, size=ln, replace=False)
+        lists.append(np.unique(base.astype(np.int64)))
+    return lists
+
+
+def small_lists(seed=0, n_lists=10, universe=500, max_len=90):
+    """The build-parity corpus: small enough for the device builders'
+    fixed-shape rounds, correlated enough to produce real rules."""
+    rng = np.random.default_rng(seed)
+    out = []
+    hot = np.sort(rng.choice(universe, size=universe // 4, replace=False))
+    for i in range(n_lists):
+        ln = int(rng.integers(2, max_len))
+        pool = hot if i % 3 == 0 else np.arange(universe)
+        out.append(np.unique(rng.choice(pool, size=min(ln, pool.size),
+                                        replace=False).astype(np.int64)))
+    return out
+
+
+def adversarial_lists(rng, universe=1200, n_random=10, max_len=60):
+    """Randomized lists plus the engine edge-case shapes: a singleton, a
+    2-element list at the universe edges, and a provably disjoint pair
+    (indices ``n_random`` .. ``n_random+3``)."""
+    lists = []
+    for _ in range(n_random):
+        ln = int(rng.integers(2, max_len))
+        lists.append(np.unique(rng.choice(universe, size=ln, replace=False)))
+    lists.append(np.asarray([universe // 3]))                    # singleton
+    lists.append(np.asarray([0, universe - 1]))                  # edges
+    lists.append(np.arange(0, universe, 7, dtype=np.int64)[:50])
+    lists.append(np.arange(3, universe, 7, dtype=np.int64)[:50])  # disjoint ^
+    return lists
+
+
+def random_ast(rng, num_lists, max_depth=3):
+    """Seeded random boolean AST over ``num_lists`` term ids (including a
+    slice of out-of-vocabulary ids, which must evaluate to the empty set).
+    The numpy fallback generator for the differential gate when hypothesis
+    is not installed."""
+    from repro.query.ast import And, Not, Or, Phrase, Term
+
+    def term_id():
+        # ~1 in 8 draws is out of vocabulary (-1 or past the last list)
+        if rng.random() < 0.125:
+            return int(rng.choice([-1, num_lists, num_lists + 3]))
+        return int(rng.integers(0, num_lists))
+
+    def node(depth):
+        ops = ["term", "phrase"] if depth >= max_depth else \
+            ["term", "term", "phrase", "and", "and", "or", "not"]
+        op = ops[int(rng.integers(len(ops)))]
+        if op == "term":
+            return Term(term_id())
+        if op == "phrase":
+            k = int(rng.integers(2, 4))
+            return Phrase(tuple(term_id() for _ in range(k)))
+        if op == "not":
+            return Not(node(depth + 1))
+        k = int(rng.integers(2, 4))
+        kids = tuple(node(depth + 1) for _ in range(k))
+        return And(kids) if op == "and" else Or(kids)
+
+    return node(0)
+
+
+# -- hypothesis strategies ----------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def posting_lists(draw, max_lists=8, max_universe=600, max_len=120):
+        """2..max_lists sorted unique int64 arrays over one universe."""
+        n = draw(st.integers(2, max_lists))
+        u = draw(st.integers(16, max_universe))
+        out = []
+        for _ in range(n):
+            ln = draw(st.integers(1, min(max_len, u)))
+            ids = draw(st.sets(st.integers(0, u - 1),
+                               min_size=ln, max_size=ln))
+            out.append(np.asarray(sorted(ids), dtype=np.int64))
+        return out
+
+    def query_asts(num_lists, max_leaves=6):
+        """Recursive boolean/phrase AST strategy over ``num_lists`` term
+        ids, including out-of-vocabulary ids (shrinks toward bare terms)."""
+        from repro.query.ast import And, Not, Or, Phrase, Term
+
+        terms = st.integers(-1, num_lists + 1)
+        leaves = st.one_of(
+            st.builds(Term, terms),
+            st.builds(lambda ts: Phrase(tuple(ts)),
+                      st.lists(terms, min_size=2, max_size=3)),
+        )
+        return st.recursive(
+            leaves,
+            lambda inner: st.one_of(
+                st.builds(lambda cs: And(tuple(cs)),
+                          st.lists(inner, min_size=2, max_size=3)),
+                st.builds(lambda cs: Or(tuple(cs)),
+                          st.lists(inner, min_size=2, max_size=3)),
+                st.builds(Not, inner),
+            ),
+            max_leaves=max_leaves,
+        )

@@ -4,7 +4,7 @@ import numpy as np
 
 from repro.core import bitmaps as BM
 from repro.index.builder import build_index
-from repro.index.query import QueryEngine
+from repro.query.legacy import LegacyQueryEngine as QueryEngine
 
 
 def test_bitmap_roundtrip(lists):

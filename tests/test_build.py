@@ -12,22 +12,12 @@ build_index -> FlatIndex/PagedIndex product.
 import numpy as np
 import pytest
 
+from strategies import small_lists
+
 from repro.build import (BuildConfig, BUILDERS, make_builder,
                          validate_builders)
 from repro.build.host import HostBuilder
 from repro.core.repair import repair_compress
-
-
-def small_lists(seed=0, n_lists=10, universe=500, max_len=90):
-    rng = np.random.default_rng(seed)
-    out = []
-    hot = np.sort(rng.choice(universe, size=universe // 4, replace=False))
-    for i in range(n_lists):
-        ln = int(rng.integers(2, max_len))
-        pool = hot if i % 3 == 0 else np.arange(universe)
-        out.append(np.unique(rng.choice(pool, size=min(ln, pool.size),
-                                        replace=False).astype(np.int64)))
-    return out
 
 
 def assert_same_result(a, b):

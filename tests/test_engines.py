@@ -6,6 +6,8 @@ past the last element (x > last)."""
 import numpy as np
 import pytest
 
+from strategies import adversarial_lists
+
 from repro.core.jax_index import INT_INF, build_flat_index
 from repro.core.repair import repair_compress
 from repro.engine import ENGINES, HostEngine, JnpEngine, PallasEngine, \
@@ -17,17 +19,9 @@ MAX_SHORT = 64
 @pytest.fixture(scope="module")
 def elists(rng):
     """Randomized lists plus adversarial shapes: a singleton, a 2-element
-    list at the universe edge, and a provably disjoint pair."""
-    u = 1200
-    lists = []
-    for _ in range(10):
-        ln = int(rng.integers(2, 60))
-        lists.append(np.unique(rng.choice(u, size=ln, replace=False)))
-    lists.append(np.asarray([u // 3]))                    # singleton
-    lists.append(np.asarray([0, u - 1]))                  # edges
-    lists.append(np.arange(0, u, 7, dtype=np.int64)[:50])  # evens-ish
-    lists.append(np.arange(3, u, 7, dtype=np.int64)[:50])  # disjoint with ^
-    return lists
+    list at the universe edge, and a provably disjoint pair (see
+    strategies.adversarial_lists)."""
+    return adversarial_lists(rng)
 
 
 @pytest.fixture(scope="module")

@@ -108,3 +108,65 @@ def test_empty_intersection():
     b = np.asarray([2, 4, 6])
     res = repair_compress([a, b])
     assert I.intersect_skip(res, 0, 1).size == 0
+
+
+# -- edge-case units ----------------------------------------------------------
+
+def test_baeza_yates_empties_and_duplicates():
+    """baeza_yates is an array-level baseline: it must survive empty
+    operands and (non-increasing) duplicated inputs, emitting each common
+    value once."""
+    e = np.asarray([], dtype=np.int64)
+    a = np.asarray([1, 1, 2, 5, 9])
+    b = np.asarray([1, 2, 2, 7, 9, 9])
+    np.testing.assert_array_equal(I.baeza_yates(e, a), e)
+    np.testing.assert_array_equal(I.baeza_yates(a, e), e)
+    np.testing.assert_array_equal(I.baeza_yates(e, e), e)
+    np.testing.assert_array_equal(I.baeza_yates(a, b), [1, 2, 9])
+    np.testing.assert_array_equal(I.baeza_yates(b, a), [1, 2, 9])
+    one = np.asarray([4])
+    np.testing.assert_array_equal(I.baeza_yates(one, one), [4])
+    np.testing.assert_array_equal(
+        I.baeza_yates(one, np.asarray([3, 5])), e)
+
+
+def test_intersect_multi_ordering_invariance(lists, setup, rng):
+    """intersect_multi sorts by uncompressed length itself — the caller's
+    ordering of idxs must not change the result."""
+    res, asamp, bsamp = setup
+    for _ in range(6):
+        k = int(rng.integers(2, 5))
+        idxs = list(rng.choice(len(lists), k, replace=False).astype(int))
+        for samp in (None, asamp, bsamp):
+            want = I.intersect_multi(res, idxs, samp)
+            for perm in (idxs[::-1],
+                         list(rng.permutation(idxs).astype(int))):
+                np.testing.assert_array_equal(
+                    I.intersect_multi(res, perm, samp), want)
+
+
+@pytest.mark.parametrize("acc_kind", ["sampled", "lookup"])
+def test_cursor_reuse_across_next_geq(lists, setup, acc_kind):
+    """One cursor carried across ascending next_geq probes must answer
+    exactly like a fresh accessor+cursor per probe — the resumability
+    contract _svs_core relies on (SampledList additionally carries its
+    sample bracket ``_t`` across probes)."""
+    res, asamp, bsamp = setup
+    i = max(range(len(lists)), key=lambda i: len(lists[i]))
+    arr = lists[i]
+
+    def make():
+        return (I.SampledList(res, i, asamp, "exp") if acc_kind == "sampled"
+                else I.LookupList(res, i, bsamp))
+
+    reused = make()
+    cur = reused.cursor()
+    probes = np.unique(np.concatenate(
+        [arr[::3], arr[1:] - 1, [int(arr[-1]) + 5]]))
+    for x in probes:
+        fresh = make()
+        want = fresh.next_geq(int(x), fresh.cursor())
+        got = reused.next_geq(int(x), cur)
+        assert got == want, f"{acc_kind} x={x}"
+        pos = np.searchsorted(arr, x)
+        assert want == (int(arr[pos]) if pos < arr.size else None)

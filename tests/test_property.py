@@ -11,23 +11,13 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from strategies import posting_lists  # noqa: E402  (shared generators)
+
 from repro.core import intersect as I
 from repro.core.dictionary import build_forest
 from repro.core.optimize import optimize_rules
 from repro.core.repair import repair_compress
 from repro.core.sampling import build_a_sampling, build_b_sampling
-
-
-@st.composite
-def posting_lists(draw, max_lists=8, max_universe=600, max_len=120):
-    n = draw(st.integers(2, max_lists))
-    u = draw(st.integers(16, max_universe))
-    out = []
-    for _ in range(n):
-        ln = draw(st.integers(1, min(max_len, u)))
-        ids = draw(st.sets(st.integers(0, u - 1), min_size=ln, max_size=ln))
-        out.append(np.asarray(sorted(ids), dtype=np.int64))
-    return out
 
 
 @settings(max_examples=40, deadline=None)

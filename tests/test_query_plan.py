@@ -1,0 +1,273 @@
+"""The boolean-planner differential gate (DESIGN.md §7).
+
+Every AST — seeded-random numpy trees always, hypothesis-generated trees
+when hypothesis is installed — must evaluate **bit-identically** to a
+naive numpy set-algebra oracle on every engine × layout: HostEngine,
+JnpEngine flat, JnpEngine paged, PallasEngine (interpret), for the
+planner's own algorithm picks AND for every forced algorithm.  Plus the
+regression pins: out-of-vocabulary (empty) terms, single-element lists,
+``Not`` at the root, page-straddling phrase windows, and the sharded
+dispatch path.
+
+The random-AST seed follows ``REPRO_BENCH_SEED`` so the CI matrix cell
+that flips the seed exercises a different query stream.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from strategies import adversarial_lists, random_ast
+
+from repro.core.repair import repair_compress
+from repro.engine import HostEngine, JnpEngine, PallasEngine
+from repro.query import (And, ListStats, Not, Or, Phrase, QueryExecutor,
+                         QueryParseError, Term, explain, make_plan,
+                         naive_eval, parse, to_str)
+
+SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
+ENGINE_CONFIGS = ("host", "jnp", "jnp_paged", "pallas")
+
+
+@pytest.fixture(scope="module")
+def qlists(rng):
+    """Adversarial corpus: random lists + singleton + edges + a disjoint
+    pair (strategies.adversarial_lists, universe small enough that Not
+    complements stay cheap)."""
+    return adversarial_lists(rng, universe=700, n_random=8, max_len=70)
+
+
+@pytest.fixture(scope="module")
+def qres(qlists):
+    return repair_compress(qlists)
+
+
+@pytest.fixture(scope="module")
+def qengines(qres):
+    return {
+        "host": HostEngine(qres),
+        "jnp": JnpEngine(qres, max_short_len=64),
+        "jnp_paged": JnpEngine(qres, max_short_len=64, paged=True,
+                               page_size=128),
+        "pallas": PallasEngine(qres, max_short_len=64, interpret=True),
+    }
+
+
+def _check(engine, lists, universe, node, force_algo=None):
+    want = naive_eval(node, lists, universe)
+    got = QueryExecutor(engine, force_algo=force_algo).search(node)
+    np.testing.assert_array_equal(
+        got, want, err_msg=f"algo={force_algo} query={to_str(node)}")
+
+
+# -- the differential gate ---------------------------------------------------
+
+@pytest.mark.parametrize("ename", ENGINE_CONFIGS)
+def test_differential_random_asts(qlists, qres, qengines, ename):
+    """Planner-picked algorithms: 25 seeded-random ASTs per engine."""
+    rng = np.random.default_rng(SEED + 1)
+    for _ in range(25):
+        node = random_ast(rng, len(qlists))
+        _check(qengines[ename], qlists, qres.universe, node)
+
+
+@pytest.mark.parametrize("algo", ["merge", "svs", "bys", "meld"])
+def test_differential_forced_algos(qlists, qres, qengines, algo):
+    """Every algorithm the planner can pick must be exact on its own."""
+    rng = np.random.default_rng(SEED + 2)
+    for _ in range(10):
+        node = random_ast(rng, len(qlists))
+        for ename in ("host", "jnp"):
+            _check(qengines[ename], qlists, qres.universe, node, algo)
+
+
+def test_hypothesis_differential(qlists, qres, qengines):
+    """Hypothesis-generated ASTs (shrinkable) across ALL engine layouts."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from strategies import query_asts
+
+    @settings(max_examples=20, deadline=None)
+    @given(node=query_asts(len(qlists)))
+    def gate(node):
+        for eng in qengines.values():
+            _check(eng, qlists, qres.universe, node)
+
+    gate()
+
+
+# -- regression pins ----------------------------------------------------------
+
+def test_empty_and_oov_terms(qlists, qres, qengines):
+    """Out-of-vocabulary terms are empty sets, and empty sets propagate."""
+    L = len(qlists)
+    cases = [
+        Term(-1),
+        Term(L + 5),
+        And((Term(-1), Term(0))),
+        Or((Term(-1), Term(1))),
+        Not(Term(-1)),                       # complement of empty = domain
+        Phrase((0, L)),                      # phrase with a missing term
+        And((Term(L - 2), Term(L - 1))),     # constructed-disjoint pair
+    ]
+    for node in cases:
+        for eng in qengines.values():
+            _check(eng, qlists, qres.universe, node)
+
+
+def test_singleton_and_edge_lists(qlists, qres, qengines):
+    """The singleton list and the universe-edge list as probe targets."""
+    L = len(qlists)
+    singleton, edges = L - 4, L - 3
+    for node in [And((Term(singleton), Term(0))),
+                 And((Term(edges), Term(1))),
+                 And((Term(singleton), Term(edges))),
+                 Or((Term(singleton), Not(Term(edges))))]:
+        for algo in (None, "merge", "svs", "bys"):
+            for eng in qengines.values():
+                _check(eng, qlists, qres.universe, node, algo)
+
+
+def test_not_at_root(qlists, qres, qengines):
+    for node in [Not(Term(0)), Not(And((Term(0), Term(1)))),
+                 Not(Not(Term(2))), Not(Or((Term(0), Not(Term(1)))))]:
+        for eng in qengines.values():
+            _check(eng, qlists, qres.universe, node)
+
+
+def _positional_fixture(page_size):
+    """A tiny positional corpus whose compressed stream spans several
+    pages, with a planted phrase whose occurrences sit around page
+    boundaries (positions are doc*stride + offset)."""
+    rng = np.random.default_rng(SEED + 3)
+    stride, num_docs, vocab = 64, 30, 12
+    term_pos: dict[int, list[int]] = {t: [] for t in range(vocab)}
+    for d in range(num_docs):
+        n = int(rng.integers(20, 40))
+        toks = rng.integers(0, vocab, n)
+        for off in range(0, n - 3, 9):      # plant phrase (3,4,5) often
+            toks[off:off + 3] = [3, 4, 5]
+        for off, t in enumerate(toks):
+            term_pos[int(t)].append(d * stride + off)
+    plists = [np.asarray(sorted(set(term_pos[t])), np.int64)
+              for t in range(vocab)]
+    pres = repair_compress(plists)
+    return plists, pres, stride
+
+
+@pytest.mark.parametrize("page_size", [64, 128])
+def test_page_straddling_phrase_windows(page_size):
+    """Phrase probes whose skip windows cross stream-page boundaries: the
+    paged engine must agree with host and with the positional oracle."""
+    plists, pres, stride = _positional_fixture(page_size)
+    n_pages = -(-int(pres.starts[-1]) // page_size)
+    assert n_pages >= 3, "fixture must span several pages"
+    engines = [HostEngine(pres),
+               JnpEngine(pres, max_short_len=64, paged=True,
+                         page_size=page_size)]
+    domain = -(-pres.universe // stride)
+    for node in [Phrase((3, 4, 5)), Phrase((4, 5)), Phrase((3, 4, 5, 6)),
+                 And((Term(3), Phrase((4, 5)))), Phrase((5, 3))]:
+        want = naive_eval(node, plists, domain, stride=stride)
+        for eng in engines:
+            for algo in (None, "svs", "bys"):
+                got = QueryExecutor(eng, positional=stride,
+                                    force_algo=algo).search(node)
+                np.testing.assert_array_equal(
+                    got, want,
+                    err_msg=f"{eng.name} algo={algo} {to_str(node)}")
+        assert naive_eval(Phrase((3, 4, 5)), plists, domain,
+                          stride=stride).size > 0
+
+
+def test_sharded_dispatch_path(qlists, qres):
+    """The executor's svs probes ride the shard_map dispatch when the
+    engine carries a mesh (single-device mesh: same math, sharded code)."""
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    eng = JnpEngine(qres, max_short_len=64, mesh=mesh)
+    rng = np.random.default_rng(SEED + 4)
+    for _ in range(6):
+        node = random_ast(rng, len(qlists))
+        _check(eng, qlists, qres.universe, node, "svs")
+
+
+# -- planner/parser units ------------------------------------------------------
+
+def test_parser_roundtrip_and_precedence():
+    n = parse('(1 AND 2) OR NOT 3')
+    assert n == Or((And((Term(1), Term(2))), Not(Term(3))))
+    assert parse('1 2 3') == And((Term(1), Term(2), Term(3)))  # implicit AND
+    assert parse('1 AND 2 OR 3') == Or((And((Term(1), Term(2))), Term(3)))
+    assert parse('NOT 1 AND 2') == And((Not(Term(1)), Term(2)))
+    assert parse('"3 4 5"') == Phrase((3, 4, 5))
+    assert parse('"7"') == Term(7)
+    assert parse(to_str(n)) == n
+    assert parse('foo bar', term_map={"foo": 4}) == And((Term(4), Term(-1)))
+    for bad in ('', '1 AND', '(1', '"1 2', 'AND 1', 'x'):
+        with pytest.raises(QueryParseError):
+            parse(bad)
+
+
+def test_planner_orders_and_annotates(qres, qengines):
+    stats = ListStats.from_engine(qengines["host"])
+    lens = stats.lengths
+    ts = np.argsort(lens)[[0, len(lens) // 2, len(lens) - 1]]
+    node = And(tuple(Term(int(t)) for t in ts[::-1]))  # longest first in AST
+    plan = make_plan(node, stats)
+    if not plan.meld:
+        seed_pos = plan.steps[0][0]
+        seed_len = lens[node.children[seed_pos].t]
+        assert seed_len == min(lens[int(t)] for t in ts)
+        assert all(a in ("merge", "svs", "bys") for _, a in plan.steps[1:])
+    txt = explain(plan)
+    assert "and" in txt and "term" in txt
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        make_plan(node, stats, force_algo="quantum")
+
+
+def test_bys_and_meld_primitives_parity(qlists, qres, qengines, rng):
+    """The new engine primitives against their oracles, all engines."""
+    L = len(qlists)
+    lids = rng.integers(0, L, 120).astype(np.int32)
+    xs = rng.integers(0, qres.universe + 50, 120).astype(np.int32)
+    base = np.asarray(qengines["host"].next_geq_batch(lids, xs))
+    for name, eng in qengines.items():
+        np.testing.assert_array_equal(
+            np.asarray(eng.next_geq_bys_batch(lids, xs)), base,
+            err_msg=f"bys {name}")
+    for idxs in ([0, 1, 2], [3, 1], [L - 2, L - 1, 0], [5], []):
+        want = None
+        for i in idxs:
+            want = qlists[i] if want is None else np.intersect1d(
+                want, qlists[i])
+        want = np.empty(0, np.int64) if want is None else want
+        for name, eng in qengines.items():
+            np.testing.assert_array_equal(
+                eng.intersect_multi_meld(idxs), want,
+                err_msg=f"meld {name} {idxs}")
+
+
+def test_query_server_search(qlists, qres):
+    from repro.serve import QueryServer
+    srv = QueryServer(qres, engine="jnp", max_short_len=64)
+    q = '(0 AND 1) OR NOT 2'
+    want = naive_eval(parse(q), qlists, qres.universe)
+    np.testing.assert_array_equal(srv.search(q), want)
+    np.testing.assert_array_equal(srv.search(q, force_algo="bys"), want)
+    assert "term" in srv.explain(q)
+    # planner survives a hot swap (stats are per-index)
+    srv.swap_index(qres)
+    np.testing.assert_array_equal(srv.search(q), want)
+
+
+def test_legacy_shim_deprecation(qlists):
+    from repro.index.builder import build_index
+    from repro.index.query import QueryEngine   # the deprecated path itself
+    ix = build_index(qlists, optimize=False, codecs=())
+    with pytest.warns(DeprecationWarning, match="QueryExecutor"):
+        qe = QueryEngine(ix, method="lookup")
+    np.testing.assert_array_equal(
+        qe.conjunctive([0, 1]), np.intersect1d(qlists[0], qlists[1]))

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.index import build_index, zipf_corpus, pack_documents
 from repro.index.corpus import randomize_lists
-from repro.index.query import QueryEngine
+from repro.query.legacy import LegacyQueryEngine as QueryEngine
 from repro.models import transformer as T
 from repro.serve import DecodeEngine, ServeConfig
 
