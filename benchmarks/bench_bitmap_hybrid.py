@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.engine import DeviceEngine, make_engine, validate_engines
 from repro.index.builder import build_index
-from repro.query.legacy import LegacyQueryEngine as QueryEngine
+from repro.index.hybrid import HybridQueryEngine as QueryEngine
 
 from .common import corpus_lists, emit, time_us
 

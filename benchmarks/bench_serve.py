@@ -1,0 +1,107 @@
+"""Serving-throughput benchmark: the cross-query batching runtime
+(DESIGN.md §8.4).
+
+A Zipf boolean/phrase workload (``common.boolean_workload``) is driven
+through the coalescing scheduler at concurrency {1, 8, 64} per engine
+backend.  Concurrency 1 is the serial baseline (batch window 1 — one
+query in flight, coalescing factor exactly 1); higher windows let the
+scheduler merge the pending probe rounds of all in-flight queries into
+shared device dispatches.  Reported per cell: qps, p50/p95 latency, and
+the mean coalescing factor (queries per merged dispatch — the direct
+measure of amortized dispatch overhead).
+
+Every result is oracle-checked on a warmup pass before timing, so a qps
+number can never come from a wrong answer.  Honest-numbers note (same as
+BENCH_build): on a 2-core CPU box the host engine wins on raw qps — the
+device engines pay interpreter/XLA dispatch costs that batching amortizes
+but cannot erase; the coalescing factor column is the hardware-portable
+signal (it rises with concurrency on every backend, and on a real
+accelerator each merged dispatch is one kernel launch instead of many).
+
+  PYTHONPATH=src python -m benchmarks.run --only serve
+  PYTHONPATH=src python -m benchmarks.bench_serve --engine host,jnp
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.jax_index import build_flat_index
+from repro.core.repair import repair_compress
+from repro.engine import make_engine, validate_engines
+from repro.query import naive_eval
+from repro.serve.scheduler import QueryScheduler
+
+from .common import BENCH_SEED, boolean_workload, corpus_lists, emit
+
+DEFAULT_ENGINES = ("host", "jnp", "pallas")
+CONCURRENCY = (1, 8, 64)
+
+CORPUS = dict(num_docs=600, vocab_size=1500, mean_doc_len=60)
+
+
+def run(engines=DEFAULT_ENGINES, n_queries=64) -> list[dict]:
+    lists, num_docs = corpus_lists(**CORPUS)
+    res = repair_compress(lists)
+    fi = build_flat_index(res)
+    queries = boolean_workload(len(lists), [len(l) for l in lists],
+                               n_queries=n_queries)
+    oracle = [naive_eval(q, lists, res.universe) for q in queries]
+
+    rows = []
+    for name in engines:
+        kwargs = {"fi": fi} if name in ("jnp", "pallas") else {}
+        eng = make_engine(name, res, **kwargs)
+        for conc in CONCURRENCY:
+            # warmup pass: jit compilation + the correctness gate
+            warm = QueryScheduler(eng, batch_window=conc,
+                                  result_cache_size=0)
+            for got, want in zip(warm.search_many(queries), oracle):
+                np.testing.assert_array_equal(got, want)
+            # timed pass on a fresh scheduler (result cache off: we are
+            # timing execution, not memoization)
+            sch = QueryScheduler(eng, batch_window=conc,
+                                 result_cache_size=0)
+            t0 = time.perf_counter()
+            sch.search_many(queries)
+            dt = time.perf_counter() - t0
+            st = sch.stats()
+            rows.append({
+                "engine": name,
+                "concurrency": conc,
+                "n_queries": len(queries),
+                "qps": len(queries) / dt,
+                "p50_ms": st["p50_ms"],
+                "p95_ms": st["p95_ms"],
+                "coalescing_factor": st["coalescing_factor"],
+                "dispatches": st["dispatches"],
+                "merged_lanes": st["merged_lanes"],
+            })
+            emit(rows[-1:], f"{name} × concurrency {conc}")
+    return rows
+
+
+def main(engines=DEFAULT_ENGINES, n_queries=64) -> dict:
+    validate_engines(engines)
+    rows = run(engines, n_queries)
+    return {
+        "seed": BENCH_SEED,
+        "corpus": CORPUS,
+        "concurrency": list(CONCURRENCY),
+        "rows": rows,
+        "qps": {f"{r['engine']}/c{r['concurrency']}": r["qps"]
+                for r in rows},
+        "coalescing": {f"{r['engine']}/c{r['concurrency']}":
+                       r["coalescing_factor"] for r in rows},
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", type=str, default=",".join(DEFAULT_ENGINES))
+    ap.add_argument("--n", type=int, default=64)
+    args = ap.parse_args()
+    main(engines=tuple(args.engine.split(",")), n_queries=args.n)

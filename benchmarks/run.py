@@ -24,6 +24,7 @@ BENCHES = {
     "heights": "benchmarks.bench_heights",
     "fig3": "benchmarks.bench_intersection",
     "boolean": "benchmarks.bench_boolean",
+    "serve": "benchmarks.bench_serve",
     "fig4": "benchmarks.bench_tradeoff",
     "hybrid": "benchmarks.bench_bitmap_hybrid",
     "optimize": "benchmarks.bench_optimize",

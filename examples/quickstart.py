@@ -8,8 +8,7 @@ import numpy as np
 
 from repro.build import make_builder
 from repro.core.dictionary import build_forest
-from repro.index import build_index, zipf_corpus
-from repro.query.legacy import LegacyQueryEngine as QueryEngine
+from repro.index import HybridQueryEngine as QueryEngine, build_index, zipf_corpus
 
 
 def main() -> None:

@@ -81,6 +81,24 @@ def main() -> None:
             oracle = np.intersect1d(oracle, lists[t])
         np.testing.assert_array_equal(got, oracle)
     print("k-term spot-checks match the set oracle")
+
+    # coalesced boolean serving (DESIGN.md §8): concurrent queries share
+    # merged probe dispatches through the scheduler
+    bool_qs = [" AND ".join(str(t) for t in q[:3]) for q in queries]
+    srv.search(bool_qs[0])  # compile
+    t0 = time.perf_counter()
+    bouts = srv.search_many(bool_qs)
+    dt = time.perf_counter() - t0
+    st = srv.serve_stats()
+    print(f"boolean via scheduler: {len(bool_qs)} queries in "
+          f"{dt*1e3:.1f} ms ({len(bool_qs)/dt:.0f} q/s), coalescing "
+          f"factor {st['coalescing_factor']:.1f} over "
+          f"{st['dispatches']} merged dispatches")
+    for q, got in list(zip(queries, bouts))[::8]:
+        oracle = lists[q[0]]
+        for t in q[1:3]:
+            oracle = np.intersect1d(oracle, lists[t])
+        np.testing.assert_array_equal(got, oracle)
     print("\nserve_queries OK")
 
 

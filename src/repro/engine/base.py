@@ -22,17 +22,29 @@ The four operations:
 * ``intersect_multi(idxs)``        — one k-term conjunctive query,
   pairwise svs from shortest to longest by *uncompressed* length (§3.3 —
   Re-Pair compressed lengths are non-monotonic).
+
+``dispatch_round(list_ids, xs, algo)`` is the serving runtime's entry
+point (DESIGN.md §8.2): one merged probe round — the concatenated
+ProbeRound workloads of every in-flight query — routed to
+``next_geq_batch``/``next_geq_bys_batch``, padded to a power-of-two
+bucket on the device engines so merged sizes reuse O(log Q) jit entries.
 """
 
 from __future__ import annotations
 
 import abc
+import os
 from typing import Sequence
 
 import numpy as np
 
+from ..core.cache import LRUCache
 from ..core.jax_index import INT_INF
 from ..core.repair import RePairResult
+
+#: entry bound of the per-engine decoded-list LRU (env override
+#: ``REPRO_DECODE_CACHE``; 0 disables caching)
+DECODE_CACHE_SIZE = int(os.environ.get("REPRO_DECODE_CACHE", "512"))
 
 
 class Engine(abc.ABC):
@@ -40,10 +52,16 @@ class Engine(abc.ABC):
 
     name: str = "abstract"
 
+    #: index-version token in every decode-cache key — the same keying the
+    #: serving scheduler's caches use (DESIGN.md §8.3).  ``QueryServer``
+    #: stamps it at each hot-swap; bumping it orphans the old entries, so
+    #: the LRU evicts them as new decodes land.
+    index_version: int = 0
+
     def __init__(self, res: RePairResult):
         self.res = res
         self.lengths = np.asarray(res.orig_lengths, dtype=np.int64)
-        self._decoded: dict[int, np.ndarray] = {}
+        self._decoded = LRUCache(DECODE_CACHE_SIZE)
 
     # -- point operations ---------------------------------------------------
 
@@ -75,20 +93,40 @@ class Engine(abc.ABC):
                               int(INT_INF))
         return out.astype(np.int32)
 
+    # -- merged probe rounds -------------------------------------------------
+
+    def dispatch_round(self, list_ids: np.ndarray, xs: np.ndarray,
+                       algo: str = "svs") -> np.ndarray:
+        """One (possibly cross-query merged) probe round: route the flat
+        ``(list_ids, xs)`` workload of a :class:`~repro.query.steps.ProbeRound`
+        to the matching primitive — ``"svs"`` → ``next_geq_batch``,
+        ``"bys"`` → ``next_geq_bys_batch``.  Both are elementwise in the
+        (list, probe) pairs, so concatenating the rounds of many queries
+        into one dispatch returns bit-identical values per lane; device
+        engines additionally pad merged rounds to power-of-two buckets
+        (DESIGN.md §8.2) so arbitrary merged sizes reuse O(log Q) jit
+        entries.  The host tier dispatches unpadded — its loop would pay
+        for the dead lanes."""
+        if algo == "bys":
+            return np.asarray(self.next_geq_bys_batch(list_ids, xs))
+        return np.asarray(self.next_geq_batch(list_ids, xs))
+
     # -- whole-list decode ---------------------------------------------------
 
     def decode_list(self, i: int) -> np.ndarray:
         """Full expansion of one list to sorted int64 doc ids (cached —
         the boolean executor's merge/union/complement operands).  The
+        cache is a bounded LRU keyed on ``(index_version, i)``; the
         cached array is returned by reference and frozen: an accidental
         in-place mutation by a caller raises instead of silently
         corrupting every later query that touches the list."""
         i = int(i)
-        out = self._decoded.get(i)
+        key = (self.index_version, i)
+        out = self._decoded.get(key)
         if out is None:
             out = self._decode_list(i)
             out.flags.writeable = False
-            self._decoded[i] = out
+            self._decoded.put(key, out)
         return out
 
     def _decode_list(self, i: int) -> np.ndarray:

@@ -212,6 +212,34 @@ class DeviceEngine(Engine):
 
     # -- engine API ---------------------------------------------------------
 
+    #: merged probe rounds are padded up to power-of-two buckets of at
+    #: least this many lanes (DESIGN.md §8.2)
+    ROUND_BUCKET_MIN = 16
+
+    def dispatch_round(self, list_ids: np.ndarray, xs: np.ndarray,
+                       algo: str = "svs") -> np.ndarray:
+        """Merged-round padding convention for the device tier: the
+        scheduler concatenates the pending rounds of every in-flight
+        query, so the flat size varies tick to tick.  Pad with no-op
+        lanes — ``(list 0, probe 0)`` — up to the next power of two (min
+        ``ROUND_BUCKET_MIN``) and slice the answers back, so every jitted
+        probe program (flat, paged, shard_map, pallas) sees O(log Q)
+        distinct shapes instead of one per merged size."""
+        lids = np.asarray(list_ids, np.int32).ravel()
+        xq = np.asarray(xs, np.int32).ravel()
+        n = lids.size
+        if n == 0:
+            return np.empty(0, dtype=np.int32)
+        bucket = max(self.ROUND_BUCKET_MIN, 1 << (n - 1).bit_length())
+        if bucket != n:
+            lids = np.pad(lids, (0, bucket - n))
+            xq = np.pad(xq, (0, bucket - n))
+        if algo == "bys":
+            vals = self.next_geq_bys_batch(lids, xq)
+        else:
+            vals = self.next_geq_batch(lids, xq)
+        return np.asarray(vals)[:n]
+
     def next_geq_batch(self, list_ids: np.ndarray,
                        xs: np.ndarray) -> np.ndarray:
         lids = np.asarray(list_ids, np.int32)

@@ -14,11 +14,12 @@ from typing import Sequence
 import numpy as np
 
 from ..core import intersect as I
+from ..core.cache import LRUCache
 from ..core.jax_index import INT_INF
 from ..core.repair import RePairResult
 from ..core.sampling import (ASampling, BSampling, build_a_sampling,
                              build_b_sampling)
-from .base import Engine
+from .base import DECODE_CACHE_SIZE, Engine
 
 
 class HostEngine(Engine):
@@ -35,7 +36,9 @@ class HostEngine(Engine):
                                         if method == "svs" else None)
         self.bsamp: BSampling | None = (build_b_sampling(res, B)
                                         if method == "lookup" else None)
-        self._accs: dict[int, I.CompressedList] = {}
+        # bounded like the decode cache: merged serving rounds touch the
+        # whole Zipf head, and accessors hold O(span) decoded state
+        self._accs = LRUCache(DECODE_CACHE_SIZE)
 
     def _acc(self, i: int) -> I.CompressedList:
         if self.method == "svs":
@@ -51,7 +54,8 @@ class HostEngine(Engine):
         reset to the fresh-instance state before each reuse."""
         acc = self._accs.get(i)
         if acc is None:
-            acc = self._accs[i] = self._acc(i)
+            acc = self._acc(i)
+            self._accs.put(i, acc)
         if self.method == "svs":
             acc._t = 0
         return acc

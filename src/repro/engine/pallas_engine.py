@@ -13,6 +13,13 @@ are computed once at construction and reused for every launch.
 
 ``interpret=None`` auto-selects: compiled on TPU, interpreter elsewhere —
 the same convention as the other kernels' ops wrappers.
+
+Merged probe rounds (the serving scheduler's cross-query dispatches,
+DESIGN.md §8.2) arrive through the inherited
+``DeviceEngine.dispatch_round`` pow2 padding; the kernel's own host-side
+router then re-pads the sorted queries to a ``TILE_Q`` multiple, so a
+merged round costs the same launch shape as a single-query round of the
+same bucket.
 """
 
 from __future__ import annotations

@@ -1,6 +1,6 @@
 from .corpus import SyntheticCorpus, zipf_corpus, pack_documents
 from .builder import InvertedIndex, build_index
-from .query import QueryEngine
+from .hybrid import HybridQueryEngine
 
 __all__ = [
     "SyntheticCorpus",
@@ -8,5 +8,5 @@ __all__ = [
     "pack_documents",
     "InvertedIndex",
     "build_index",
-    "QueryEngine",
+    "HybridQueryEngine",
 ]

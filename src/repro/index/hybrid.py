@@ -1,12 +1,16 @@
-"""The pre-planner host query engine, absorbed from ``index/query.py``.
+"""The [MC07] hybrid bitmap query engine over an :class:`InvertedIndex`.
 
-This is the original host-only path over an :class:`InvertedIndex` —
-method selection mirrors paper §5 (merge / skip / svs / lookup), plus the
-[MC07] hybrid bitmap routing the planner does not model.  New code should
-use :class:`repro.query.QueryExecutor`, which runs the same queries
-through the backend-pluggable engine seam with cost-based per-node
-algorithm selection; this class remains for the bitmap-hybrid benchmarks
-and as the deprecation target of ``repro.index.query.QueryEngine``.
+Host-only routing the planner does not model: long lists stored as
+bitmaps answer with bitwise AND / bitmap filtering, everything else goes
+through the paper's §5 method ladder (merge / skip / svs / lookup) or a
+byte-code codec.  This is the engine behind the paper's NEGATIVE result
+reproduction (``benchmarks/bench_bitmap_hybrid``): bitmaps help byte
+codes more than Re-Pair.
+
+Boolean/phrase queries over a *pure* Re-Pair index should use
+:class:`repro.query.QueryExecutor` (cost-based planning over the
+backend-pluggable engine seam) — this class exists for the index shapes
+the seam does not cover: mixed bitmap/compressed/codec storage.
 """
 
 from __future__ import annotations
@@ -19,11 +23,11 @@ from ..core import bitmaps as BM
 from ..core import intersect as I
 from ..core.codecs import svs_encoded
 
-if TYPE_CHECKING:  # import cycle: repro.index.__init__ imports our shim
-    from ..index.builder import InvertedIndex
+if TYPE_CHECKING:
+    from .builder import InvertedIndex
 
 
-class LegacyQueryEngine:
+class HybridQueryEngine:
     def __init__(self, index: "InvertedIndex", method: str = "lookup",
                  search: str = "exp"):
         self.ix = index

@@ -21,7 +21,9 @@ import numpy as np
 
 def serve_queries(n_queries: int, engine: str = "jnp",
                   data_shards: int = 0, builder: str = "host",
-                  refreshes: int = 0, query: str | None = None) -> None:
+                  refreshes: int = 0, query: str | None = None,
+                  concurrency: int = 0,
+                  batch_window: int | None = None) -> None:
     from ..build import make_builder
     from ..index import zipf_corpus
     from ..serve.query_serve import QueryServer
@@ -51,7 +53,8 @@ def serve_queries(n_queries: int, engine: str = "jnp",
                              f"{len(devs)} available devices")
         mesh = Mesh(_np.array(devs[:data_shards]), ("data",))
         print(f"shard_map dispatch over data axis: {data_shards} device(s)")
-    srv = QueryServer(res, max_short_len=256, engine=engine, mesh=mesh)
+    srv = QueryServer(res, max_short_len=256, engine=engine, mesh=mesh,
+                      batch_window=batch_window)
     rng = np.random.default_rng(0)
     pairs = [tuple(map(int, rng.choice(len(lists), 2, replace=False)))
              for _ in range(n_queries)]
@@ -64,6 +67,43 @@ def serve_queries(n_queries: int, engine: str = "jnp",
     for (a, b), got in list(zip(pairs, outs))[::max(len(pairs)//8, 1)]:
         np.testing.assert_array_equal(got, np.intersect1d(lists[a], lists[b]))
     print("spot checks OK")
+
+    # cross-query batching (DESIGN.md §8): a Zipf boolean workload runs
+    # through the scheduler with --concurrency queries in flight; probe
+    # rounds of concurrent queries merge into shared device dispatches
+    if concurrency:
+        from ..query import naive_eval
+        rngq = np.random.default_rng(1)
+        order = sorted(range(len(lists)), key=lambda i: -len(lists[i]))
+        p = np.arange(1, len(lists) + 1, dtype=np.float64) ** -1.1
+        p /= p.sum()
+
+        def draw(k):
+            return [int(order[r]) for r in
+                    rngq.choice(len(lists), size=k, replace=False, p=p)]
+
+        qs = []
+        for _ in range(max(concurrency * 4, 16)):
+            ts = draw(int(rngq.integers(2, 4)))
+            qs.append(" AND ".join(str(t) for t in ts)
+                      if rngq.random() < 0.7 else
+                      f"({ts[0]} AND {ts[1]}) OR NOT {ts[-1]}")
+        import os
+        if batch_window is None and "REPRO_BATCH_WINDOW" not in os.environ:
+            # window defaults to the offered concurrency; an explicit
+            # --batch-window or REPRO_BATCH_WINDOW wins
+            srv.scheduler.batch_window = max(1, concurrency)
+        outs = srv.search_many(qs)
+        for qstr, got in list(zip(qs, outs))[::max(len(qs) // 8, 1)]:
+            np.testing.assert_array_equal(
+                got, naive_eval(srv.plan(qstr).node, lists, res.universe))
+        st = srv.serve_stats()
+        print(f"scheduler: {st['completed']} boolean queries, "
+              f"{st['qps']:.0f} q/s, p50 {st['p50_ms']:.2f} ms / "
+              f"p95 {st['p95_ms']:.2f} ms, coalescing factor "
+              f"{st['coalescing_factor']:.2f} over {st['dispatches']} "
+              f"merged dispatches (window {st['batch_window']}), "
+              f"spot checks OK")
 
     # boolean queries through the cost-based planner (DESIGN.md §7):
     # --query '(12 AND 40) OR NOT 7' — term ids address postings lists
@@ -140,11 +180,19 @@ def main() -> None:
     ap.add_argument("--query", default=None,
                     help="boolean query string to plan + execute, e.g. "
                          "'(12 AND 40) OR NOT 7' or '\"3 4 5\"'")
+    ap.add_argument("--concurrency", type=int, default=0,
+                    help="run a Zipf boolean workload with this many "
+                         "queries in flight through the coalescing "
+                         "scheduler (0 = skip)")
+    ap.add_argument("--batch-window", type=int, default=None,
+                    help="scheduler in-flight window (default: "
+                         "--concurrency, or REPRO_BATCH_WINDOW)")
     args = ap.parse_args()
     if args.tier == "queries":
         serve_queries(args.n, args.engine, data_shards=args.data_shards,
                       builder=args.builder, refreshes=args.refresh,
-                      query=args.query)
+                      query=args.query, concurrency=args.concurrency,
+                      batch_window=args.batch_window)
     else:
         serve_lm(args.arch, args.n)
 

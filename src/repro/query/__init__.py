@@ -22,9 +22,11 @@ from .ast import And, Node, Not, Or, Phrase, Term, terms_of, to_str, walk
 from .exec import QueryExecutor, naive_eval
 from .parser import QueryParseError, parse
 from .plan import ALGOS, ListStats, PlanNode, explain, make_plan
+from .steps import DecodeList, PhraseShift, ProbeRound, SetOp, drive
 
 __all__ = [
     "And", "Node", "Not", "Or", "Phrase", "Term", "terms_of", "to_str",
     "walk", "QueryExecutor", "naive_eval", "QueryParseError", "parse",
     "ALGOS", "ListStats", "PlanNode", "explain", "make_plan",
+    "ProbeRound", "DecodeList", "SetOp", "PhraseShift", "drive",
 ]

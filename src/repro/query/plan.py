@@ -96,6 +96,11 @@ class PlanNode:
     est_cost: float                   # estimated symbol touches
     steps: list[tuple[int, str]] | None = None  # and/phrase lowering
     meld: bool = False                # whole-node k-way melding
+    #: estimated ProbeRound suspension points of the lowered step machine
+    #: (DESIGN.md §8.1) — the query's *batching depth*: how many coalescing
+    #: ticks it needs end to end.  Or children lower in parallel, so an Or
+    #: costs the max of its branches, not the sum.
+    est_rounds: float = 0.0
 
     def algos(self) -> set[str]:
         out = {a for _, a in (self.steps or [])}
@@ -149,7 +154,7 @@ def make_plan(node: Node, stats: ListStats,
     if isinstance(node, Not):
         c = make_plan(node.child, stats, force_algo, probe_terms)
         return PlanNode(node, "not", [c], est_n=D - c.est_n,
-                        est_cost=c.est_cost + D)
+                        est_cost=c.est_cost + D, est_rounds=c.est_rounds)
 
     if isinstance(node, Or):
         kids = [make_plan(c, stats, force_algo, probe_terms)
@@ -157,7 +162,11 @@ def make_plan(node: Node, stats: ListStats,
         est = min(D, sum(k.est_n for k in kids))
         return PlanNode(node, "or", kids,
                         est_n=est,
-                        est_cost=sum(k.est_cost + k.est_n for k in kids))
+                        est_cost=sum(k.est_cost + k.est_n for k in kids),
+                        # branches lower in parallel (exec._lower_parallel):
+                        # the machine needs max, not sum, probe rounds
+                        est_rounds=max((k.est_rounds for k in kids),
+                                       default=0.0))
 
     if isinstance(node, (And, Phrase)):
         if isinstance(node, Phrase):
@@ -182,11 +191,15 @@ def make_plan(node: Node, stats: ListStats,
         cand = kids[order[0]].est_n
         steps: list[tuple[int, str]] = [(order[0], "seed")]
         cost = kids[order[0]].est_cost
+        rounds = kids[order[0]].est_rounds
         for pos in order[1:]:
             algo, c = _step_cost(stats, cand, kids[pos], force_algo,
                                  probe_ok)
             steps.append((pos, algo))
             cost += c
+            # probe steps suspend once; merge steps evaluate the child
+            rounds += (1.0 if algo in ("svs", "bys")
+                       else kids[pos].est_rounds)
             cand = max(1.0, cand * kids[pos].est_n / D)
         # k-way adaptive melding: only meaningful for >= 3 bare terms, and
         # only when terms ARE doc-id lists (melding position lists would
@@ -197,10 +210,14 @@ def make_plan(node: Node, stats: ListStats,
             meld_cost = len(kids) * n_min * (1.0 + stats.depth)
             if force_algo == "meld" or (force_algo is None
                                         and meld_cost < cost):
+                # frontier chasing: one round per alternation, bounded by
+                # 2*n_min + 1 (every round either emits or skips past the
+                # shortest list's next element)
                 return PlanNode(node, op, kids, est_n=est,
-                                est_cost=meld_cost, steps=None, meld=True)
+                                est_cost=meld_cost, steps=None, meld=True,
+                                est_rounds=1.0 + 2.0 * n_min)
         return PlanNode(node, op, kids, est_n=est, est_cost=cost,
-                        steps=steps)
+                        steps=steps, est_rounds=rounds)
 
     raise TypeError(f"not a query node: {node!r}")
 
@@ -217,7 +234,8 @@ def explain(plan: PlanNode, indent: int = 0) -> str:
         head = f"{pad}{plan.op}[seed={plan.steps[0][0]} {algos}]"
     else:
         head = f"{pad}{plan.op}"
-    head += f"  ~n={plan.est_n:.0f} cost={plan.est_cost:.0f}"
+    head += (f"  ~n={plan.est_n:.0f} cost={plan.est_cost:.0f} "
+             f"rounds~{plan.est_rounds:.0f}")
     lines = [head]
     for c in plan.children:
         lines.append(explain(c, indent + 1))

@@ -1,4 +1,6 @@
 from .engine import ServeConfig, DecodeEngine
 from .query_serve import QueryServer
+from .scheduler import QueryScheduler, DEFAULT_BATCH_WINDOW
 
-__all__ = ["ServeConfig", "DecodeEngine", "QueryServer"]
+__all__ = ["ServeConfig", "DecodeEngine", "QueryServer", "QueryScheduler",
+           "DEFAULT_BATCH_WINDOW"]

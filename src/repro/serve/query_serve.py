@@ -30,7 +30,16 @@ up a complete replacement engine off to the side, and swaps it in with
 one reference assignment — queries in flight on the old engine finish on
 the old index, the next batch sees the new one.  ``swap_index(res)`` is
 the second half on its own, for builds done elsewhere (e.g. a builder
-running on another host).
+running on another host).  Every swap bumps the server's **index
+version**: the scheduler's decoded-list and query-result caches are keyed
+on it and flushed, so a hot rebuild can never serve a stale answer
+(DESIGN.md §8.3).
+
+**Cross-query batching** (DESIGN.md §8): boolean queries run on the
+:class:`~repro.serve.scheduler.QueryScheduler` — ``submit``/
+``search_many`` coalesce the probe rounds of all in-flight queries into
+shared device dispatches; the single-query ``search`` is a one-entry
+scheduler run, so there is exactly one execution path.
 """
 
 from __future__ import annotations
@@ -47,6 +56,7 @@ from ..core.repair import RePairResult
 from ..engine import DeviceEngine, Engine, make_engine
 from ..query import Node, PlanNode, QueryExecutor
 from ..query.plan import explain as explain_plan
+from .scheduler import QueryScheduler
 
 
 class QueryServer:
@@ -54,7 +64,8 @@ class QueryServer:
                  B: int = 8, engine: str = "jnp",
                  interpret: bool | None = None,
                  page_size: int = DEFAULT_PAGE, paged: bool = False,
-                 mesh: Mesh | None = None):
+                 mesh: Mesh | None = None,
+                 batch_window: int | None = None):
         self._B = B
         self.max_short_len = max_short_len
         # engine construction parameters, kept so rebuild() can stand up
@@ -69,6 +80,9 @@ class QueryServer:
             else:
                 kwargs["paged"] = paged
         self._engine_kwargs = kwargs
+        self._batch_window = batch_window
+        self._scheduler: QueryScheduler | None = None
+        self.version = -1               # first swap_index brings it to 0
         self.swap_index(res)
 
     # -- build-then-hot-swap -----------------------------------------------
@@ -76,11 +90,17 @@ class QueryServer:
     def swap_index(self, res: RePairResult) -> None:
         """Atomically replace the served index: the new engine (and its
         device arrays) is built COMPLETELY before the single reference
-        swap, so serving never observes a half-built index."""
+        swap, so serving never observes a half-built index.  Bumps the
+        index version and flushes the scheduler's per-index caches;
+        queries already in flight finish on the old engine."""
         engine = make_engine(self._engine_name, res, **self._engine_kwargs)
         fi = engine.fi if isinstance(engine, DeviceEngine) else None
+        self.version += 1
+        engine.index_version = self.version
         self.res, self.engine, self._fi = res, engine, fi
         self._executor = None   # planner stats are per-index
+        if self._scheduler is not None:
+            self._scheduler.swap(engine, self.version)
 
     def rebuild(self, lists: Sequence[np.ndarray], *,
                 builder: str | Builder = "jnp",
@@ -124,25 +144,55 @@ class QueryServer:
         uncompressed length — the [BLOL06] order the paper adopts in §3.3."""
         return [self.engine.intersect_multi(list(q)) for q in queries]
 
-    # -- boolean queries (repro.query planner, DESIGN.md §7) ----------------
+    # -- boolean queries (repro.query planner + scheduler, DESIGN.md §7/§8) --
+
+    @property
+    def scheduler(self) -> QueryScheduler:
+        """The cross-query batching runtime (admission queue +
+        microbatcher, DESIGN.md §8), bound lazily to the live engine and
+        rebound with flushed caches at every index swap."""
+        if self._scheduler is None:
+            self._scheduler = QueryScheduler(
+                self.engine, batch_window=self._batch_window,
+                version=self.version)
+        return self._scheduler
 
     @property
     def executor(self) -> QueryExecutor:
         """Cost-based boolean planner bound to the live engine; rebuilt on
-        every index swap (the plans read per-list statistics)."""
+        every index swap (the plans read per-list statistics).  Shares the
+        scheduler's default executor so planner statistics are derived
+        once per index."""
         if self._executor is None:
-            self._executor = QueryExecutor(self.engine)
+            self._executor = self.scheduler._executor(None)
         return self._executor
+
+    def submit(self, q: str | Node, force_algo: str | None = None) -> int:
+        """Enqueue a boolean query on the scheduler; returns its query id
+        (``scheduler.take(qid)`` after ticking/draining)."""
+        return self.scheduler.submit(q, force_algo)
+
+    def search_many(self, queries: Sequence,
+                    force_algo: str | None = None) -> list[np.ndarray]:
+        """Coalesced execution of a query batch: all in-flight probe
+        rounds merge into shared device dispatches; results come back in
+        submit order."""
+        return self.scheduler.search_many(queries, force_algo)
 
     def search(self, q: str | Node,
                force_algo: str | None = None) -> np.ndarray:
         """Evaluate a boolean query — an AST node or a query string like
         ``'(12 AND 40) OR NOT 7'`` — through the planner + engine seam.
         ``force_algo`` pins every conjunctive step ("merge"/"svs"/"bys"/
-        "meld"); default lets the cost model choose per step."""
-        if force_algo is None:
-            return self.executor.search(q)
-        return QueryExecutor(self.engine, force_algo=force_algo).search(q)
+        "meld"); default lets the cost model choose per step.  Runs as a
+        one-entry scheduler tick, so single queries and coalesced batches
+        share one execution path."""
+        return self.scheduler.search_many([q], force_algo)[0]
+
+    def serve_stats(self) -> dict:
+        """Scheduler counters: qps, latency percentiles, coalescing
+        factor, cache hit rates (DESIGN.md §8.4)."""
+        return self.scheduler.stats()
 
     def plan(self, q: str | Node) -> PlanNode:
         return self.executor.plan(q)

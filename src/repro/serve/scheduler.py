@@ -1,0 +1,338 @@
+"""Cross-query batching runtime: admission queue + microbatcher over the
+resumable step machines (DESIGN.md §8).
+
+One query at a time, the engine seam is wasted: every conjunctive step
+dispatches a probe batch shaped like ONE candidate set, and per-dispatch
+overhead (host→device hops, jit-entry lookup, kernel launch) dominates at
+serving rates.  The scheduler amortizes it the way production engines do
+— batch the probes, not the queries:
+
+* ``submit`` plans the query against the live index and parks its lowered
+  step machine (``QueryExecutor.lower``) on an admission queue;
+* each ``tick`` admits up to ``batch_window`` queries in flight, advances
+  every machine through its host steps (``SetOp``/``PhraseShift``/
+  ``DecodeList``) until it blocks on a :class:`ProbeRound`, concatenates
+  the pending rounds of ALL blocked queries into one
+  ``engine.dispatch_round`` per (engine, algorithm), and scatters each
+  query's slice of the answers back into its continuation;
+* queries complete **out of order** — a bare-term query admitted last
+  finishes on its first advance while a 4-term meld keeps ticking.
+
+Probe primitives are elementwise in the (list, probe) lanes, so a merged
+dispatch returns bit-identical values to per-query dispatches — the
+differential gate in ``tests/test_scheduler.py`` holds the whole runtime
+to that.
+
+Two caches ride the tick loop, both keyed on the **index version** and
+flushed by ``QueryServer.swap_index`` so hot rebuilds stay correct
+(DESIGN.md §8.3): a decoded-list LRU serving ``DecodeList`` steps across
+queries, and a query-result LRU short-circuiting repeated queries (Zipf
+workloads repeat the head constantly).  In-flight queries pin the engine
+and version they were planned against, so a mid-workload swap never mixes
+indexes inside one machine.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from collections import deque
+from typing import Sequence
+
+import numpy as np
+
+from ..core.cache import LRUCache
+from ..query import QueryExecutor
+from ..query.parser import parse
+from ..query.plan import ListStats
+from ..query.steps import DecodeList, ProbeRound
+
+#: in-flight window of the microbatcher (env ``REPRO_BATCH_WINDOW``);
+#: 1 degenerates to serial execution — the CI matrix pins that
+DEFAULT_BATCH_WINDOW = int(os.environ.get("REPRO_BATCH_WINDOW", "32"))
+
+#: per-query/per-dispatch telemetry (latencies, completion order, merge
+#: widths) is kept over a sliding window so a long-lived server's
+#: bookkeeping stays bounded; cumulative counts are separate integers
+TELEMETRY_WINDOW = 65536
+
+
+class _InFlight:
+    """One admitted query: its step machine (the continuation), the
+    engine/version it was planned against, and its pending probe round."""
+
+    __slots__ = ("qid", "machine", "engine", "version", "key", "t0",
+                 "pending", "rounds", "done")
+
+    def __init__(self, qid, machine, engine, version, key, t0):
+        self.qid = qid
+        self.machine = machine
+        self.engine = engine
+        self.version = version
+        self.key = key
+        self.t0 = t0
+        self.pending: ProbeRound | None = None
+        self.rounds = 0
+        self.done = False
+
+
+class QueryScheduler:
+    """Admission queue + coalescing tick loop over one live engine.
+
+    ``batch_window`` bounds the in-flight queries whose rounds may merge;
+    ``version`` is the index-version token in every cache key.  The
+    scheduler builds one :class:`QueryExecutor` per forced algorithm
+    lazily (sharing one :class:`ListStats`), so repeated
+    ``force_algo`` queries stop re-deriving planner statistics.
+    """
+
+    def __init__(self, engine, *, batch_window: int | None = None,
+                 version: int = 0, decode_cache_size: int = 256,
+                 result_cache_size: int = 512):
+        self.batch_window = max(1, int(batch_window if batch_window
+                                       is not None else
+                                       DEFAULT_BATCH_WINDOW))
+        self.decode_cache = LRUCache(decode_cache_size)
+        self.result_cache = LRUCache(result_cache_size)
+        self.completion_order: deque[int] = deque(maxlen=TELEMETRY_WINDOW)
+        self.latencies: deque[float] = deque(maxlen=TELEMETRY_WINDOW)
+        # queries per merged dispatch (recent window)
+        self._dispatch_widths: deque[int] = deque(maxlen=TELEMETRY_WINDOW)
+        self._merged_lanes = 0
+        self._dispatches = 0
+        self._completed = 0
+        self.failures = 0
+        self._next_qid = 0
+        self._queue: deque[_InFlight] = deque()
+        self._running: list[_InFlight] = []
+        self._done: dict[int, np.ndarray] = {}
+        # (submit_time, completion_time) of recent completions — qps is
+        # computed over this window so it reflects current throughput,
+        # not a lifetime average diluted by idle gaps
+        self._spans: deque[tuple[float, float]] = deque(
+            maxlen=TELEMETRY_WINDOW)
+        self._bind(engine, version)
+
+    # -- index hot-swap ------------------------------------------------------
+
+    def _bind(self, engine, version: int) -> None:
+        self._engine = engine
+        self._version = int(version)
+        self._executors: dict[str | None, QueryExecutor] = {}
+        self._stats: ListStats | None = None
+
+    def swap(self, engine, version: int) -> None:
+        """Rebind to a hot-swapped index: flush both per-index caches and
+        drop the executors (planner statistics are per-index).  Queries
+        already in flight pinned their engine/version at submit time and
+        finish on the OLD index — the same queries-in-flight semantics as
+        ``QueryServer.swap_index``."""
+        self._bind(engine, version)
+        self.decode_cache.flush()
+        self.result_cache.flush()
+
+    def _executor(self, force_algo: str | None) -> QueryExecutor:
+        ex = self._executors.get(force_algo)
+        if ex is None:
+            if self._stats is None:
+                self._stats = ListStats.from_engine(self._engine)
+            ex = QueryExecutor(self._engine, force_algo=force_algo,
+                               stats=self._stats)
+            self._executors[force_algo] = ex
+        return ex
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, q, force_algo: str | None = None) -> int:
+        """Plan a query against the live index and enqueue its step
+        machine; returns the query id for :meth:`take`.  A result-cache
+        hit completes immediately (no machine, no rounds)."""
+        qid = self._next_qid
+        self._next_qid += 1
+        t0 = time.perf_counter()
+        ex = self._executor(force_algo)
+        node = parse(q, ex.term_map) if isinstance(q, str) else q
+        key = (self._version, force_algo, node)
+        hit = self.result_cache.get(key)
+        if hit is not None:
+            self._finish(qid, hit.copy(), t0)
+            return qid
+        fl = _InFlight(qid, ex.lower(ex.plan(node)), self._engine,
+                       self._version, key, t0)
+        self._queue.append(fl)
+        return fl.qid
+
+    def take(self, qid: int) -> np.ndarray:
+        """Pop a completed query's result (KeyError if not done yet)."""
+        return self._done.pop(qid)
+
+    # -- the coalescing tick -------------------------------------------------
+
+    def tick(self) -> int:
+        """One scheduler round: admit, advance to the next suspension
+        point, one merged dispatch per (engine, algorithm), scatter.
+        Returns the number of queries still in flight or queued."""
+        while self._queue and len(self._running) < self.batch_window:
+            fl = self._queue.popleft()
+            self._running.append(fl)
+            self._advance(fl, None, start=True)
+        groups: dict[tuple[int, str], list[_InFlight]] = {}
+        for fl in self._running:
+            if fl.pending is not None:
+                groups.setdefault((id(fl.engine), fl.pending.algo),
+                                  []).append(fl)
+        first_err: BaseException | None = None
+        for (_, algo), fls in groups.items():
+            rounds = [fl.pending for fl in fls]
+            lids = np.concatenate([r.list_ids for r in rounds])
+            xs = np.concatenate([r.xs for r in rounds])
+            self._dispatch_widths.append(len(fls))
+            self._dispatches += 1
+            self._merged_lanes += int(lids.size)
+            vals = np.asarray(fls[0].engine.dispatch_round(lids, xs, algo))
+            off = 0
+            for fl, r in zip(fls, rounds):
+                seg = vals[off:off + r.size]
+                off += r.size
+                fl.pending = None
+                fl.rounds += 1
+                try:
+                    self._advance(fl, seg)
+                except BaseException as e:   # noqa: BLE001 — re-raised below
+                    # finish scattering first: the siblings' slices of
+                    # this dispatch would otherwise be thrown away and
+                    # their probes re-dispatched (duplicate device work,
+                    # double-counted telemetry)
+                    if first_err is None:
+                        first_err = e
+        self._running = [fl for fl in self._running if not fl.done]
+        if first_err is not None:
+            raise first_err
+        return len(self._running) + len(self._queue)
+
+    def _advance(self, fl: _InFlight, value, *, start: bool = False) -> None:
+        """Run one machine until it blocks on a ProbeRound (parked for the
+        next merged dispatch) or returns (completed, out of order).  A
+        machine that RAISES is retired before the error propagates — a
+        poisoned query must not wedge the scheduler: everything else in
+        flight keeps ticking on the next call."""
+        try:
+            step = next(fl.machine) if start else fl.machine.send(value)
+            while True:
+                if isinstance(step, ProbeRound):
+                    fl.pending = step
+                    return
+                if isinstance(step, DecodeList):
+                    res = self._decode(fl, step.t)
+                else:                   # SetOp / PhraseShift: pure host
+                    res = step.run()
+                step = fl.machine.send(res)
+        except StopIteration as stop:
+            fl.done = True
+            out = np.asarray(stop.value, dtype=np.int64)
+            out = out if out.flags.writeable else out.copy()
+            if fl.key is not None and self.result_cache.maxsize > 0:
+                cached = out.copy()
+                cached.flags.writeable = False
+                self.result_cache.put(fl.key, cached)
+            self._finish(fl.qid, out, fl.t0)
+        except BaseException:
+            # retire the poisoned query so the next tick filters it out
+            # of _running instead of spinning on pending=None forever;
+            # the error still reaches the caller (drain/search_many)
+            fl.done = True
+            self.failures += 1
+            fl.machine.close()
+            raise
+
+    def _decode(self, fl: _InFlight, t: int) -> np.ndarray:
+        """Serve a DecodeList step.  Deliberately two cache layers: this
+        one is version-keyed per in-flight query and flushed by swap (the
+        serving-correctness cache); the engine's own LRU underneath also
+        serves the serial executor path and direct engine callers.  Both
+        store references to the same frozen array, so the overlap costs a
+        dict entry, not a copy."""
+        key = (fl.version, int(t))
+        arr = self.decode_cache.get(key)
+        if arr is None:
+            arr = fl.engine.decode_list(t)
+            self.decode_cache.put(key, arr)
+        return arr
+
+    def _finish(self, qid: int, out: np.ndarray, t0: float) -> None:
+        self._done[qid] = out
+        self.completion_order.append(qid)
+        now = time.perf_counter()
+        self.latencies.append(now - t0)
+        self._spans.append((t0, now))
+        self._completed += 1
+
+    # -- driving -------------------------------------------------------------
+
+    def drain(self, max_ticks: int = 10_000_000) -> None:
+        for _ in range(max_ticks):
+            if self.tick() == 0:
+                return
+        raise RuntimeError("scheduler failed to drain "
+                           f"({len(self._running)} in flight)")
+
+    def search_many(self, queries: Sequence,
+                    force_algo: str | None = None) -> list[np.ndarray]:
+        """Coalesced execution of a whole workload: submit everything,
+        tick until drained, return results in SUBMIT order (completion
+        order is recorded in ``completion_order``).  All-or-nothing on
+        error: if any query raises, the whole batch is cancelled —
+        queued/in-flight siblings are retired and completed results are
+        released (``_done`` has no size bound, so an abandoned batch must
+        not leak into it) — and the error propagates."""
+        qids = [self.submit(q, force_algo) for q in queries]
+        try:
+            self.drain()
+        except BaseException:
+            self._cancel(set(qids))
+            raise
+        return [self.take(qid) for qid in qids]
+
+    def _cancel(self, qids: set[int]) -> None:
+        """Retire a batch: drop its queued/in-flight machines and release
+        any results it already completed."""
+        self._queue = deque(fl for fl in self._queue if fl.qid not in qids)
+        for fl in self._running:
+            if fl.qid in qids and not fl.done:
+                fl.machine.close()
+                fl.done = True
+        self._running = [fl for fl in self._running if not fl.done]
+        for qid in qids:
+            self._done.pop(qid, None)
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Serving counters: throughput, latency percentiles, and the
+        coalescing factor (mean queries per merged dispatch — the direct
+        measure of how much per-dispatch overhead the batcher amortizes).
+        Percentiles and the coalescing factor cover the recent
+        ``TELEMETRY_WINDOW``; ``completed``/``dispatches``/``failures``
+        are cumulative."""
+        lat = np.asarray(list(self.latencies), dtype=np.float64)
+        widths = list(self._dispatch_widths)
+        spans = list(self._spans)
+        # windowed throughput: completions / (first submit -> last
+        # completion) over the telemetry window, so idle gaps between
+        # bursts do not dilute the number
+        elapsed = (spans[-1][1] - spans[0][0]) if spans else 0.0
+        return {
+            "completed": self._completed,
+            "failures": self.failures,
+            "in_flight": len(self._running) + len(self._queue),
+            "batch_window": self.batch_window,
+            "qps": (len(spans) / elapsed) if elapsed > 0 else 0.0,
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
+            "p95_ms": float(np.percentile(lat, 95) * 1e3) if lat.size else 0.0,
+            "dispatches": self._dispatches,
+            "merged_lanes": self._merged_lanes,
+            "coalescing_factor": (float(np.mean(widths))
+                                  if widths else 0.0),
+            "decode_cache": self.decode_cache.stats(),
+            "result_cache": self.result_cache.stats(),
+        }

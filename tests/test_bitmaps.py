@@ -4,7 +4,7 @@ import numpy as np
 
 from repro.core import bitmaps as BM
 from repro.index.builder import build_index
-from repro.query.legacy import LegacyQueryEngine as QueryEngine
+from repro.index.hybrid import HybridQueryEngine as QueryEngine
 
 
 def test_bitmap_roundtrip(lists):

@@ -261,13 +261,3 @@ def test_query_server_search(qlists, qres):
     # planner survives a hot swap (stats are per-index)
     srv.swap_index(qres)
     np.testing.assert_array_equal(srv.search(q), want)
-
-
-def test_legacy_shim_deprecation(qlists):
-    from repro.index.builder import build_index
-    from repro.index.query import QueryEngine   # the deprecated path itself
-    ix = build_index(qlists, optimize=False, codecs=())
-    with pytest.warns(DeprecationWarning, match="QueryExecutor"):
-        qe = QueryEngine(ix, method="lookup")
-    np.testing.assert_array_equal(
-        qe.conjunctive([0, 1]), np.intersect1d(qlists[0], qlists[1]))

@@ -1,0 +1,305 @@
+"""The cross-query batching runtime's differential gate (DESIGN.md §8).
+
+N concurrent seeded ASTs through the coalescing scheduler must return
+**bit-identical** results to the same ASTs run serially through the
+single-query ``search`` path, on every engine configuration —
+host / jnp flat / jnp paged / pallas(interpret) — and on a 1-device-mesh
+shard_map dispatch.  Plus the pins: out-of-order completion, result-cache
+correctness across an index hot-swap (including mid-workload), decode
+cache LRU bounds + swap eviction, and ``batch_window=1`` degenerating to
+serial execution.
+
+The random-AST seed follows ``REPRO_BENCH_SEED`` (same convention as the
+planner gate) so the CI seed-matrix cell exercises a different stream.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from strategies import adversarial_lists, random_ast
+
+from repro.core.repair import repair_compress
+from repro.engine import HostEngine, JnpEngine, PallasEngine
+from repro.query import And, Not, Or, QueryExecutor, Term, naive_eval
+from repro.serve.scheduler import QueryScheduler
+
+SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
+ENGINE_CONFIGS = ("host", "jnp", "jnp_paged", "pallas")
+
+
+@pytest.fixture(scope="module")
+def slists():
+    # module-own rng (NOT the shared session fixture): the corpus must be
+    # identical whether this file runs alone or after files that consume
+    # session-rng state, or the workload-shape assertions below flake
+    return adversarial_lists(np.random.default_rng(SEED + 99),
+                             universe=700, n_random=8, max_len=70)
+
+
+@pytest.fixture(scope="module")
+def sres(slists):
+    return repair_compress(slists)
+
+
+def _make_engine(name, res):
+    if name == "host":
+        return HostEngine(res)
+    if name == "jnp":
+        return JnpEngine(res, max_short_len=64)
+    if name == "jnp_paged":
+        return JnpEngine(res, max_short_len=64, paged=True, page_size=128)
+    if name == "pallas":
+        return PallasEngine(res, max_short_len=64, interpret=True)
+    raise ValueError(name)
+
+
+@pytest.fixture(scope="module")
+def sengines(sres):
+    return {name: _make_engine(name, sres) for name in ENGINE_CONFIGS}
+
+
+def _workload(num_lists, n, seed_off=0):
+    rng = np.random.default_rng(SEED + 11 + seed_off)
+    return [random_ast(rng, num_lists) for _ in range(n)]
+
+
+# -- the differential gate ---------------------------------------------------
+
+@pytest.mark.parametrize("ename", ENGINE_CONFIGS)
+def test_scheduler_matches_serial_search(slists, sres, sengines, ename):
+    """Coalesced concurrent execution == serial PR 4 search, bit for bit."""
+    eng = sengines[ename]
+    n = 12 if ename == "pallas" else 24    # interpret mode is slow
+    queries = _workload(len(slists), n)
+    serial = [QueryExecutor(eng).search(q) for q in queries]
+    sch = QueryScheduler(eng, batch_window=8)
+    outs = sch.search_many(queries)
+    for q, got, want in zip(queries, outs, serial):
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(got,
+                                      naive_eval(q, slists, sres.universe))
+    assert sch.stats()["completed"] == len(queries)
+
+
+def test_concurrency_merges_probe_rounds(slists, sres, sengines):
+    """Forced-svs conjunctions guarantee >= 2 probe rounds per query, so
+    a window of 8 MUST merge rounds across queries (factor > 1)."""
+    rng = np.random.default_rng(SEED + 12)
+    queries = [And(tuple(Term(int(t)) for t in
+                         rng.choice(8, size=3, replace=False)))
+               for _ in range(16)]
+    for ename in ("host", "jnp"):
+        sch = QueryScheduler(sengines[ename], batch_window=8,
+                             result_cache_size=0)
+        for q, got in zip(queries, sch.search_many(queries, "svs")):
+            np.testing.assert_array_equal(
+                got, naive_eval(q, slists, sres.universe))
+        st = sch.stats()
+        assert st["coalescing_factor"] > 1.0, st
+
+
+def test_scheduler_sharded_dispatch(slists, sres):
+    """The merged rounds ride the shard_map dispatch when the engine
+    carries a mesh (1-device mesh: same math, sharded code path)."""
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    eng = JnpEngine(sres, max_short_len=64, mesh=mesh)
+    queries = _workload(len(slists), 10, seed_off=1)
+    sch = QueryScheduler(eng, batch_window=8)
+    for q, got in zip(queries, sch.search_many(queries)):
+        np.testing.assert_array_equal(got,
+                                      naive_eval(q, slists, sres.universe))
+
+
+def test_forced_algos_through_scheduler(slists, sres, sengines):
+    """Every forced algorithm is exact under coalescing too."""
+    queries = _workload(len(slists), 8, seed_off=2)
+    for algo in ("merge", "svs", "bys", "meld"):
+        sch = QueryScheduler(sengines["jnp"], batch_window=4)
+        for q, got in zip(queries, sch.search_many(queries, algo)):
+            np.testing.assert_array_equal(
+                got, naive_eval(q, slists, sres.universe),
+                err_msg=f"algo={algo}")
+
+
+# -- behaviour pins ----------------------------------------------------------
+
+def test_out_of_order_completion(slists, sres, sengines):
+    """A cheap bare-term query admitted alongside a deep conjunction
+    finishes first; results still map to the right submitters."""
+    eng = sengines["host"]
+    heavy = And(tuple(Term(t) for t in (0, 1, 2, 3)))   # >= 3 probe rounds
+    light = Term(4)                                      # no probe rounds
+    sch = QueryScheduler(eng, batch_window=4)
+    qid_heavy = sch.submit(heavy, "svs")    # forced probes: >= 1 round
+    qid_light = sch.submit(light)
+    sch.drain()
+    assert sch.completion_order.index(qid_light) < \
+        sch.completion_order.index(qid_heavy)
+    np.testing.assert_array_equal(
+        sch.take(qid_light), naive_eval(light, slists, sres.universe))
+    np.testing.assert_array_equal(
+        sch.take(qid_heavy), naive_eval(heavy, slists, sres.universe))
+
+
+def test_batch_window_one_is_serial(slists, sres, sengines):
+    """Window 1 degenerates to serial: never more than one query per
+    dispatch, results unchanged."""
+    eng = sengines["host"]
+    queries = _workload(len(slists), 10, seed_off=3)
+    sch = QueryScheduler(eng, batch_window=1)
+    outs = sch.search_many(queries)
+    for q, got in zip(queries, outs):
+        np.testing.assert_array_equal(got,
+                                      naive_eval(q, slists, sres.universe))
+    st = sch.stats()
+    assert st["dispatches"] == 0 or st["coalescing_factor"] == 1.0
+
+
+def test_result_cache_hits_and_swap_flush(slists, sres):
+    """Repeated queries hit the result cache; a hot swap flushes it so
+    the same query re-executes against the new index."""
+    from repro.serve.query_serve import QueryServer
+    srv = QueryServer(sres, engine="host")
+    q = "(0 AND 1) OR 2"
+    want_old = naive_eval(srv.plan(q).node, slists, sres.universe)
+    np.testing.assert_array_equal(srv.search(q), want_old)
+    h0 = srv.serve_stats()["result_cache"]["hits"]
+    np.testing.assert_array_equal(srv.search(q), want_old)   # cache hit
+    assert srv.serve_stats()["result_cache"]["hits"] == h0 + 1
+
+    # swap to a DIFFERENT index: a stale cache would return want_old
+    new_lists = [np.unique(l // 2) for l in slists]
+    new_res = repair_compress(new_lists)
+    srv.swap_index(new_res)
+    want_new = naive_eval(srv.plan(q).node, new_lists, new_res.universe)
+    got = srv.search(q)
+    np.testing.assert_array_equal(got, want_new)
+    assert not np.array_equal(want_old, want_new), \
+        "fixture must distinguish the two indexes"
+
+
+def test_mid_workload_swap(slists, sres):
+    """Queries in flight at swap time finish on the index they were
+    planned against; queries submitted after see the new index."""
+    from repro.serve.query_serve import QueryServer
+    srv = QueryServer(sres, engine="host")
+    heavy = And(tuple(Term(t) for t in (0, 1, 2, 3)))
+    sch = srv.scheduler
+    qid_old = sch.submit(heavy, "svs")      # forced probes: stays in
+    sch.tick()                      # flight across the swap below
+    new_lists = [np.unique(l // 2) for l in slists]
+    new_res = repair_compress(new_lists)
+    srv.swap_index(new_res)
+    qid_new = sch.submit(heavy)
+    sch.drain()
+    np.testing.assert_array_equal(
+        sch.take(qid_old), naive_eval(heavy, slists, sres.universe))
+    np.testing.assert_array_equal(
+        sch.take(qid_new), naive_eval(heavy, new_lists, new_res.universe))
+
+
+def test_decode_cache_lru_bound_and_swap_eviction(slists, sres):
+    """The engine decode cache is a bounded LRU keyed on the index
+    version, and ``swap_index`` leaves no stale decoded list reachable."""
+    from repro.engine.base import Engine
+    from repro.serve.query_serve import QueryServer
+
+    eng = HostEngine(sres)
+    eng._decoded.maxsize = 4        # shrink the bound for the test
+    for t in range(8):
+        eng.decode_list(t)
+    assert len(eng._decoded) <= 4
+    # LRU: most recent survive, oldest evicted
+    assert (eng.index_version, 7) in eng._decoded
+    assert (eng.index_version, 0) not in eng._decoded
+
+    srv = QueryServer(sres, engine="host")
+    before = srv.search("0")
+    assert srv.scheduler.decode_cache.stats()["size"] > 0
+    new_lists = [np.unique(l // 2) for l in slists]
+    srv.swap_index(repair_compress(new_lists))
+    assert srv.scheduler.decode_cache.stats()["size"] == 0   # flushed
+    # the new engine starts at the bumped version with an empty cache
+    assert srv.engine.index_version == srv.version
+    assert len(srv.engine._decoded) == 0
+    np.testing.assert_array_equal(srv.search("0"), new_lists[0])
+    np.testing.assert_array_equal(before, slists[0])
+
+
+def test_poisoned_query_does_not_wedge(slists, sres, sengines):
+    """A machine that raises is retired: the error surfaces to the
+    caller, and the scheduler keeps serving everything else."""
+    from repro.serve.scheduler import _InFlight
+    sch = QueryScheduler(sengines["host"], batch_window=4)
+
+    def boom():
+        raise RuntimeError("boom")
+        yield   # pragma: no cover — makes this a generator
+
+    bad = _InFlight(sch._next_qid, boom(), sch._engine, sch._version,
+                    None, 0.0)
+    sch._next_qid += 1
+    sch._queue.append(bad)
+    ok = sch.submit(Term(0))
+    with pytest.raises(RuntimeError, match="boom"):
+        sch.drain()
+    sch.drain()                     # scheduler still drains the healthy query
+    np.testing.assert_array_equal(sch.take(ok),
+                                  naive_eval(Term(0), slists, sres.universe))
+    assert sch.stats()["failures"] == 1
+    assert sch.stats()["in_flight"] == 0
+    assert sch._done == {}          # nothing leaked
+
+
+def test_failed_batch_cancels_cleanly(slists, sres, sengines):
+    """Cancelling a batch retires its queued machines and releases any
+    results it already completed (the search_many error path)."""
+    sch = QueryScheduler(sengines["host"], batch_window=2)
+
+    def boom():
+        raise RuntimeError("boom")
+        yield   # pragma: no cover — makes this a generator
+
+    qids = [sch.submit(Term(0)), sch.submit(Term(1)), sch.submit(Term(2))]
+    sch._queue[1].machine = boom()          # poison the middle query
+    with pytest.raises(RuntimeError, match="boom"):
+        sch.drain()
+    sch._cancel(set(qids))
+    assert sch._done == {}
+    assert sch.stats()["in_flight"] == 0
+    # the scheduler keeps serving after the cancelled batch
+    np.testing.assert_array_equal(
+        sch.search_many([Term(0)])[0],
+        naive_eval(Term(0), slists, sres.universe))
+
+
+def test_intra_query_or_coalescing(slists, sres, sengines):
+    """Or branches lower in parallel: probe rounds of independent
+    branches merge inside ONE yielded ProbeRound."""
+    from repro.query.steps import ProbeRound
+    eng = sengines["host"]
+    node = Or((And((Term(0), Term(1))), And((Term(2), Term(3)))))
+    qx = QueryExecutor(eng, force_algo="svs")
+    machine = qx.lower(qx.plan(node))
+    merged = []
+    try:
+        step = next(machine)
+        while True:
+            if isinstance(step, ProbeRound):
+                merged.append(np.unique(step.list_ids).size)
+                res = eng.dispatch_round(step.list_ids, step.xs, step.algo)
+            elif hasattr(step, "run"):
+                res = step.run()
+            else:
+                res = eng.decode_list(step.t)
+            step = machine.send(res)
+    except StopIteration as stop:
+        out = stop.value
+    np.testing.assert_array_equal(out,
+                                  naive_eval(node, slists, sres.universe))
+    # the two branches' first probe rounds merged: >= 2 lists in one round
+    assert max(merged, default=0) >= 2

@@ -5,9 +5,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
+from repro.engine import make_engine
 from repro.index import build_index, zipf_corpus, pack_documents
 from repro.index.corpus import randomize_lists
-from repro.query.legacy import LegacyQueryEngine as QueryEngine
+from repro.query import And, Or, QueryExecutor, Term
 from repro.models import transformer as T
 from repro.serve import DecodeEngine, ServeConfig
 
@@ -47,19 +48,19 @@ def test_corpus_and_index_end_to_end():
     lists = corpus.postings()
     assert all((np.diff(l) > 0).all() for l in lists if len(l) > 1)
     ix = build_index(lists, corpus.num_docs)
-    qe = QueryEngine(ix, method="lookup")
+    qx = QueryExecutor(make_engine("host", ix.repair))
     rng = np.random.default_rng(0)
     for _ in range(20):
         i, j = rng.choice(len(lists), 2, replace=False)
         oracle = np.intersect1d(lists[i], lists[j])
-        np.testing.assert_array_equal(qe.conjunctive([int(i), int(j)]),
-                                      oracle)
+        np.testing.assert_array_equal(
+            qx.search(And((Term(int(i)), Term(int(j))))), oracle)
     # disjunctive + multi-term
     i, j, k = 0, 1, 2
     np.testing.assert_array_equal(
-        qe.disjunctive([i, j]),
+        qx.search(Or((Term(i), Term(j)))),
         np.union1d(lists[i], lists[j]))
-    tri = qe.conjunctive([i, j, k])
+    tri = qx.search(And((Term(i), Term(j), Term(k))))
     oracle = np.intersect1d(np.intersect1d(lists[i], lists[j]), lists[k])
     np.testing.assert_array_equal(tri, oracle)
 
