@@ -85,6 +85,26 @@ def boolean_workload(num_lists, lengths, n_queries=64, seed=None,
     return out
 
 
+def ranked_workload(num_lists, lengths, n_queries=32, seed=None,
+                    max_terms=4, zipf_s=1.1):
+    """Zipf-distributed ranked (bag-of-words) query stream: each query is
+    a bag of 2..max_terms distinct term ids, drawn — like
+    ``boolean_workload`` — by a Zipf law over the POPULARITY ranking, so
+    the stream hits the multi-page head lists the block-max directory
+    actually prunes.  Returns a list of term-id lists; a pure function of
+    the arguments (``seed=None`` means the run-wide ``BENCH_SEED``)."""
+    rng = np.random.default_rng(BENCH_SEED if seed is None else seed)
+    order = np.argsort(-np.asarray(lengths))         # popularity ranking
+    p = np.arange(1, num_lists + 1, dtype=np.float64) ** (-zipf_s)
+    p /= p.sum()
+    out = []
+    for _ in range(n_queries):
+        k = int(rng.integers(2, max_terms + 1))
+        ranks = rng.choice(num_lists, size=k, replace=False, p=p)
+        out.append([int(order[r]) for r in ranks])
+    return out
+
+
 def time_us(fn, *args, repeat=3, number=20) -> float:
     """Median-of-repeat mean μs per call."""
     best = []

@@ -25,6 +25,7 @@ BENCHES = {
     "fig3": "benchmarks.bench_intersection",
     "boolean": "benchmarks.bench_boolean",
     "serve": "benchmarks.bench_serve",
+    "topk": "benchmarks.bench_topk",
     "fig4": "benchmarks.bench_tradeoff",
     "hybrid": "benchmarks.bench_bitmap_hybrid",
     "optimize": "benchmarks.bench_optimize",

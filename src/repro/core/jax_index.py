@@ -45,6 +45,13 @@ INT_INF = np.int32(2**31 - 1)
 #: multi-page (grid-blocked) kernel path on tiny corpora.
 DEFAULT_PAGE = int(os.environ.get("REPRO_PAGE_SIZE", "2048"))
 
+#: BM25 parameters (DESIGN.md §9.1).  The postings are binary (tf == 1 for
+#: every posting — doc ids, no positions at the doc level), so the classic
+#: tf saturation term collapses to a per-document weight; k1/b keep their
+#: standard roles through that weight.
+BM25_K1 = 0.9
+BM25_B = 0.4
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -262,4 +269,191 @@ def build_paged_index(fi: FlatIndex,
         bck_page=jnp.asarray((abs_pos // page_size).astype(np.int32)),
         bck_off=jnp.asarray((abs_pos % page_size).astype(np.int32)),
         page_size=page_size,
+    )
+
+
+# -- ranked scoring: BM25 tables + block-max page directory (DESIGN.md §9) ---
+
+def bm25_idf(df: np.ndarray, ndocs: int) -> np.ndarray:
+    """Per-term idf, float64 math rounded ONCE to float32 — the one shared
+    rounding point that keeps engine scoring and the brute-force oracle
+    bit-identical.  ``log(1 + (N - df + 0.5) / (df + 0.5))`` is the
+    non-negative BM25+ variant (df can approach N on Zipf heads)."""
+    df = np.asarray(df, np.float64)
+    return np.log1p((float(ndocs) - df + 0.5) / (df + 0.5)).astype(np.float32)
+
+
+def bm25_doc_weights(dl: np.ndarray, avgdl: float, k1: float = BM25_K1,
+                     b: float = BM25_B) -> np.ndarray:
+    """Per-document BM25 weight under binary postings: with tf == 1 the
+    score factorizes as ``score(d) = doc_w[d] * sum(idf[t] : d in list t)``
+    where ``doc_w = (k1+1) / (1 + k1*(1 - b + b*dl/avgdl))``.  float64
+    math, one float32 rounding; 0 for documents in no list."""
+    dl = np.asarray(dl, np.float64)
+    w = (k1 + 1.0) / (1.0 + k1 * (1.0 - b + b * dl / max(avgdl, 1e-12)))
+    return np.where(dl > 0, w, 0.0).astype(np.float32)
+
+
+def accumulate_scores(si: "ScoreIndex", terms: np.ndarray,
+                      member: np.ndarray, docs: np.ndarray) -> np.ndarray:
+    """The ONE scoring reduction (DESIGN.md §9.3): float32 sum of idf over
+    the member terms in ASCENDING term-id order, then one float32 multiply
+    by the doc weight.  Every backend and the oracle run this exact
+    operation sequence, so ranked scores are bit-comparable — float32
+    addition is not associative, the fixed order is what buys equality.
+
+    ``terms`` (K,) ascending ids, ``member`` (K, D) bool, ``docs`` (D,)."""
+    acc = np.zeros(docs.size, np.float32)
+    for j in range(int(terms.size)):
+        acc = acc + np.where(member[j], si.idf[int(terms[j])],
+                             np.float32(0.0))
+    return (si.doc_w[docs] * acc).astype(np.float32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ScoreIndex:
+    """BM25 scoring tables + the block-max page directory (DESIGN.md §9).
+
+    Piggybacks on the paged stream layout: every posting list is cut at
+    the SAME page boundaries the paged kernels DMA by, and each (list,
+    page) intersection becomes one *page entry* carrying everything a
+    device decode of just that page needs (symbol range, running base
+    value, head flag) plus the float32 **upper bound** of any single-term
+    contribution ``idf[t] * doc_w[d]`` inside it — the WAND block max.
+
+    The bound survives quantization by construction: ``idf`` and ``doc_w``
+    are rounded to float32 FIRST, and the per-page max is taken over the
+    already-rounded products, so it is a true upper bound of the float32
+    scores the engines produce (§9.2's safety argument adds a slack factor
+    for the float32 accumulation error, not for these tables).
+
+    Registered pytree like :class:`FlatIndex`: the tables are leaves
+    (numpy on host; engines move what they need to device), the scalar
+    configuration is static aux data.
+    """
+
+    # global tables
+    idf: np.ndarray         # (L,) f32 per-term idf
+    doc_w: np.ndarray       # (U,) f32 per-doc BM25 weight (0: in no list)
+    list_max: np.ndarray    # (L,) f32 max single-term contribution per list
+
+    # block-max page directory: one entry per (list, stream page)
+    page_off: np.ndarray    # (L+1,) entry span of each list
+    pg_list: np.ndarray     # (E,) owning list id
+    pg_page: np.ndarray     # (E,) global stream page id
+    pg_sym_lo: np.ndarray   # (E,) absolute symbol range within the page
+    pg_sym_hi: np.ndarray   # (E,)
+    pg_base: np.ndarray     # (E,) absolute value before the first element
+    pg_last: np.ndarray     # (E,) last element — [base, last] is the doc-id
+                            #      range the Block-Max rest aligns on
+    pg_head: np.ndarray     # (E,) 1 iff the entry emits the list head
+    pg_elem_lo: np.ndarray  # (E,) first decoded-element index (host slicing)
+    pg_count: np.ndarray    # (E,) elements the entry decodes to
+    pg_ub: np.ndarray       # (E,) f32 block max of idf*doc_w in the entry
+    pg_wmax: np.ndarray     # (E,) f32 block max of doc_w alone — the
+                            #      second admission bound (wmax * sum idf)
+
+    # static configuration — aux data, not leaves
+    page_size: int = dataclasses.field(metadata=dict(static=True))
+    max_page_elems: int = dataclasses.field(metadata=dict(static=True))
+    ndocs: int = dataclasses.field(metadata=dict(static=True))
+    k1: float = dataclasses.field(metadata=dict(static=True))
+    b: float = dataclasses.field(metadata=dict(static=True))
+    avgdl: float = dataclasses.field(metadata=dict(static=True))
+
+
+def build_score_index(res: RePairResult, page_size: int | None = None,
+                      k1: float = BM25_K1, b: float = BM25_B) -> ScoreIndex:
+    """Precompute the scoring tier for one compressed index (host numpy,
+    once per index build — the ranked-retrieval analogue of the
+    (b)-sampling pass).
+
+    ``page_size`` must match the layout of the engine that will decode the
+    page entries (``None`` = ``DEFAULT_PAGE``); document length here is
+    the number of lists containing the document (binary postings)."""
+    P = DEFAULT_PAGE if page_size is None else \
+        max(128, -(-int(page_size) // 128) * 128)
+    g = res.grammar
+    nt = g.num_terminals
+    L = res.num_lists
+    starts = np.asarray(res.starts, np.int64)
+    N = int(starts[-1])
+    num_pages = max(1, -(-N // P))
+
+    decoded = [res.decode_list(i) for i in range(L)]
+    dl = np.zeros(max(1, int(res.universe)), np.int64)
+    for d in decoded:
+        dl[d] += 1
+    ndocs = int((dl > 0).sum())
+    avgdl = float(dl.sum() / max(ndocs, 1))
+    idf = bm25_idf(np.asarray(res.orig_lengths, np.int64), ndocs)
+    doc_w = bm25_doc_weights(dl, avgdl, k1, b)
+
+    # expansion length of every stream symbol (gaps it decodes to)
+    seq = np.asarray(res.seq, np.int64)
+    sym_lens = np.ones(N, np.int64)
+    if g.num_rules:
+        is_rule = seq >= nt
+        sym_lens[is_rule] = np.asarray(g.lengths,
+                                       np.int64)[seq[is_rule] - nt]
+
+    page_off = np.zeros(L + 1, np.int64)
+    cols: dict[str, list] = {k: [] for k in
+                             ("list", "page", "sym_lo", "sym_hi", "base",
+                              "last", "head", "elem_lo", "count", "ub",
+                              "wmax")}
+    list_max = np.zeros(L, np.float32)
+    for i in range(L):
+        docs = decoded[i]
+        n = docs.size
+        if n == 0:
+            page_off[i + 1] = len(cols["page"])
+            continue
+        lo, hi = int(starts[i]), int(starts[i + 1])
+        # gaps decoded before each span-symbol boundary (element j of the
+        # list is the head for j == 0, else the (j-1)-th gap)
+        gcb = np.concatenate([[0], np.cumsum(sym_lens[lo:hi])])
+        contrib = (np.float32(idf[i]) * doc_w[docs]).astype(np.float32)
+        list_max[i] = contrib.max()
+        p0 = min(lo // P, num_pages - 1)
+        p1 = (hi - 1) // P if hi > lo else p0
+        for p in range(p0, p1 + 1):
+            slo, shi = max(lo, p * P), min(hi, (p + 1) * P)
+            head = 1 if p == p0 else 0
+            glo = int(gcb[slo - lo]) if shi > slo else 0
+            ghi = int(gcb[shi - lo]) if shi > slo else 0
+            elem_lo = 0 if head else 1 + glo
+            count = head + (ghi - glo)
+            cols["list"].append(i)
+            cols["page"].append(p)
+            cols["sym_lo"].append(slo)
+            cols["sym_hi"].append(shi)
+            cols["base"].append(int(docs[0]) if head else int(docs[glo]))
+            cols["last"].append(int(docs[elem_lo + count - 1]))
+            cols["head"].append(head)
+            cols["elem_lo"].append(elem_lo)
+            cols["count"].append(count)
+            cols["ub"].append(contrib[elem_lo:elem_lo + count].max())
+            cols["wmax"].append(doc_w[docs[elem_lo:elem_lo + count]].max())
+        page_off[i + 1] = len(cols["page"])
+
+    counts = np.asarray(cols["count"], np.int64)
+    return ScoreIndex(
+        idf=idf, doc_w=doc_w, list_max=list_max,
+        page_off=page_off.astype(np.int32),
+        pg_list=np.asarray(cols["list"], np.int32),
+        pg_page=np.asarray(cols["page"], np.int32),
+        pg_sym_lo=np.asarray(cols["sym_lo"], np.int32),
+        pg_sym_hi=np.asarray(cols["sym_hi"], np.int32),
+        pg_base=np.asarray(cols["base"], np.int32),
+        pg_last=np.asarray(cols["last"], np.int32),
+        pg_head=np.asarray(cols["head"], np.int32),
+        pg_elem_lo=np.asarray(cols["elem_lo"], np.int32),
+        pg_count=counts.astype(np.int32),
+        pg_ub=np.asarray(cols["ub"], np.float32),
+        pg_wmax=np.asarray(cols["wmax"], np.float32),
+        page_size=P,
+        max_page_elems=int(counts.max(initial=1)),
+        ndocs=ndocs, k1=float(k1), b=float(b), avgdl=avgdl,
     )

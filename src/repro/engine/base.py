@@ -39,7 +39,8 @@ from typing import Sequence
 import numpy as np
 
 from ..core.cache import LRUCache
-from ..core.jax_index import INT_INF
+from ..core.jax_index import (DEFAULT_PAGE, INT_INF, ScoreIndex,
+                              accumulate_scores, build_score_index)
 from ..core.repair import RePairResult
 
 #: entry bound of the per-engine decoded-list LRU (env override
@@ -62,6 +63,11 @@ class Engine(abc.ABC):
         self.res = res
         self.lengths = np.asarray(res.orig_lengths, dtype=np.int64)
         self._decoded = LRUCache(DECODE_CACHE_SIZE)
+        self._score_index: ScoreIndex | None = None
+        #: optional override of the score-directory page granularity —
+        #: assign before the first ranked query to trade directory size
+        #: against pruning resolution (tests/benchmarks pin 128 here)
+        self.score_page_size: int | None = None
 
     # -- point operations ---------------------------------------------------
 
@@ -131,6 +137,86 @@ class Engine(abc.ABC):
 
     def _decode_list(self, i: int) -> np.ndarray:
         return self.res.decode_list(i)
+
+    # -- ranked scoring (DESIGN.md §9) ---------------------------------------
+
+    @property
+    def score_index(self) -> ScoreIndex:
+        """The engine's BM25 tables + block-max page directory, built
+        lazily on the first ranked query.  Page entries are cut at THIS
+        engine's stream-page boundaries (``_score_page_size``) so a page
+        decode touches exactly the pages the probe kernels DMA by."""
+        if self._score_index is None:
+            self._score_index = build_score_index(
+                self.res, page_size=self._score_page_size())
+        return self._score_index
+
+    def set_score_index(self, si: ScoreIndex) -> None:
+        """Share one prebuilt scoring tier across engines over the same
+        index (the differential gate and benchmarks build it once).  The
+        page geometry must match — entries address this engine's pages."""
+        if int(si.page_size) != int(self._score_page_size()):
+            raise ValueError(
+                f"score index page_size {si.page_size} != engine page "
+                f"size {self._score_page_size()}")
+        self._score_index = si
+
+    def _score_page_size(self) -> int:
+        if self.score_page_size is not None:
+            return int(self.score_page_size)
+        return DEFAULT_PAGE
+
+    def page_elem_bucket(self) -> int:
+        """Static width of a decoded page-entry row: the directory's max
+        element count rounded to a power of two (one jit entry per index,
+        not one per entry shape)."""
+        m = max(1, int(self.score_index.max_page_elems))
+        return max(8, 1 << (m - 1).bit_length())
+
+    def decode_page_batch(self, entries: np.ndarray) -> np.ndarray:
+        """Materialize block-max page entries: (Q,) entry ids ->
+        (Q, page_elem_bucket) int32 doc ids, INT_INF past each entry's
+        count.  Host reference: slice the cached whole-list decode (the
+        per-entry ``elem_lo``/``count`` columns exist for exactly this)."""
+        si = self.score_index
+        e = np.asarray(entries, np.int64).ravel()
+        out = np.full((e.size, self.page_elem_bucket()), int(INT_INF),
+                      np.int32)
+        for q, ei in enumerate(e.tolist()):
+            cnt = int(si.pg_count[ei])
+            lo = int(si.pg_elem_lo[ei])
+            docs = self.decode_list(int(si.pg_list[ei]))
+            out[q, :cnt] = docs[lo:lo + cnt]
+        return out
+
+    def dispatch_score_round(self, entries: np.ndarray) -> np.ndarray:
+        """One (possibly cross-query merged) ScoreRound: decode the flat
+        page-entry lanes of every in-flight ranked query.  Elementwise in
+        the entry lanes, so merged dispatches return bit-identical rows;
+        device engines pad to the same power-of-two buckets as
+        ``dispatch_round``."""
+        e = np.asarray(entries, np.int32).ravel()
+        if e.size == 0:
+            return np.empty((0, self.page_elem_bucket()), np.int32)
+        return self.decode_page_batch(e)
+
+    def score_batch(self, doc_ids: np.ndarray, terms) -> np.ndarray:
+        """Exact BM25 scores of ``doc_ids`` for the term bag ``terms``:
+        one merged membership round (all K terms × all D docs in a single
+        ``next_geq_batch``) feeding the shared fixed-order float32
+        reduction — bit-identical on every backend and to the oracle."""
+        si = self.score_index
+        docs = np.asarray(doc_ids, np.int64).ravel()
+        ts = np.asarray(sorted({int(t) for t in terms
+                                if 0 <= int(t) < self.lengths.size}),
+                        np.int64)
+        if docs.size == 0 or ts.size == 0:
+            return np.zeros(docs.size, np.float32)
+        lids = np.repeat(ts, docs.size).astype(np.int32)
+        xs = np.tile(docs, ts.size).astype(np.int32)
+        member = (np.asarray(self.next_geq_batch(lids, xs), np.int64)
+                  .reshape(ts.size, docs.size) == docs)
+        return accumulate_scores(si, ts, member, docs)
 
     # -- conjunctive queries ------------------------------------------------
 

@@ -321,6 +321,79 @@ class DeviceEngine(Engine):
             cand = J.match_mask(vals, cand)
         return self.compact(np.asarray(cand[0]))
 
+    # -- ranked scoring (DESIGN.md §9) --------------------------------------
+
+    def _score_page_size(self) -> int:
+        """Cut the score directory at THIS engine's page boundaries by
+        default: a paged engine scores by the pages its probe kernels DMA
+        by.  (The windowed decode itself is geometry-agnostic — an
+        explicit ``score_page_size`` override wins; only the fused Pallas
+        page-score kernel requires real alignment, and it falls back to
+        this path when the directory is cut differently.)"""
+        if self.score_page_size is not None:
+            return int(self.score_page_size)
+        pi = getattr(self, "pi", None)
+        return int(pi.page_size) if pi is not None else DEFAULT_PAGE
+
+    #: ScoreRound rows carry whole decoded pages, so their bucket floor is
+    #: lower than the probe lanes' — a serial query's chunk fits in one
+    SCORE_BUCKET_MIN = 8
+
+    def dispatch_score_round(self, entries: np.ndarray) -> np.ndarray:
+        """Merged ScoreRound with the same power-of-two bucket convention
+        as ``dispatch_round``: pad the entry lanes with the directory's
+        cheapest entry (fewest elements — its decode is real but its
+        guarded tiles all no-op), slice the rows back."""
+        e = np.asarray(entries, np.int32).ravel()
+        n = e.size
+        if n == 0:
+            return np.empty((0, self.page_elem_bucket()), np.int32)
+        bucket = max(self.SCORE_BUCKET_MIN, 1 << (n - 1).bit_length())
+        if bucket != n:
+            pad_id = int(np.argmin(self.score_index.pg_count))
+            e = np.pad(e, (0, bucket - n), constant_values=pad_id)
+        return self.decode_page_batch(e)[:n]
+
+    def decode_page_batch(self, entries: np.ndarray) -> np.ndarray:
+        """Device page-entry decode: gather each entry's (symbol range,
+        base, head) row from the directory and run the windowed positional
+        descent (``jnp_backend.decode_pages_batch``) — O(page) work per
+        lane regardless of list length, the block-max pruning payoff."""
+        si = self.score_index
+        e = np.asarray(entries, np.int64).ravel()
+        out = J.decode_pages_batch(
+            self.fi,
+            jnp.asarray(si.pg_sym_lo[e], jnp.int32),
+            jnp.asarray(si.pg_sym_hi[e], jnp.int32),
+            jnp.asarray(si.pg_base[e], jnp.int32),
+            jnp.asarray(si.pg_head[e], jnp.int32),
+            win=int(si.page_size), max_elems=self.page_elem_bucket())
+        return np.asarray(out)
+
+    def score_batch(self, doc_ids: np.ndarray, terms) -> np.ndarray:
+        """Device-side score accumulation: the membership probes ride the
+        batched next_geq path (sharded dispatch included), the float32
+        reduction runs on device (``accumulate_scores_device`` — a
+        sequential segment-sum over the decoded membership matrix in the
+        same fixed term order as the host reference, so the scores are
+        bit-identical)."""
+        si = self.score_index
+        docs = np.asarray(doc_ids, np.int64).ravel()
+        ts = np.asarray(sorted({int(t) for t in terms
+                                if 0 <= int(t) < self.lengths.size}),
+                        np.int64)
+        if docs.size == 0 or ts.size == 0:
+            return np.zeros(docs.size, np.float32)
+        lids = np.repeat(ts, docs.size).astype(np.int32)
+        xs = np.tile(docs, ts.size).astype(np.int32)
+        member = (np.asarray(self.next_geq_batch(lids, xs), np.int64)
+                  .reshape(ts.size, docs.size) == docs)
+        out = J.accumulate_scores_device(
+            jnp.asarray(si.idf[ts], jnp.float32),
+            jnp.asarray(si.doc_w[docs], jnp.float32),
+            jnp.asarray(member))
+        return np.asarray(out)
+
 
 class JnpEngine(DeviceEngine):
     """Fixed-trip-count vmapped jnp programs (the kernel's bit-exact

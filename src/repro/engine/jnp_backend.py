@@ -341,6 +341,83 @@ def expand_batch(fi: FlatIndex, list_ids: jax.Array, max_len: int) -> jax.Array:
     return jax.vmap(one)(list_ids)
 
 
+@partial(jax.jit, static_argnames=("win", "max_elems"))
+def decode_pages_batch(fi: FlatIndex, sym_lo: jax.Array, sym_hi: jax.Array,
+                       base: jax.Array, head: jax.Array, *, win: int,
+                       max_elems: int) -> jax.Array:
+    """Batched block-max page-entry decode (DESIGN.md §9): each lane
+    expands ONE entry of the score directory — the stream symbols
+    ``[sym_lo, sym_hi)`` of a single page — to its absolute doc ids,
+    starting from the entry's precomputed running ``base`` value.  The
+    same pointer-free positional descent as :func:`expand_batch`, but
+    windowed to one page (``win`` = page size ≥ span symbols) instead of
+    a whole list, so work per lane is O(page), not O(list).
+
+    ``head`` = 1 emits the list head (``base`` itself) in slot 0 before
+    the gap elements.  Output (Q, max_elems) int32, INT_INF padded."""
+    T = fi.num_terminals
+
+    def one(lo, hi, base, head):
+        idx = lo + jnp.arange(win, dtype=jnp.int32)
+        valid = idx < hi
+        syms = jnp.where(valid, fi.c[jnp.minimum(idx, fi.c.shape[0] - 1)], 0)
+        lens = jnp.where(valid, fi.sym_len[syms], 0)
+        sums = jnp.where(valid, fi.sym_sum[syms], 0)
+        cum_len = jnp.cumsum(lens)           # gap elements after symbol i
+        cum_sum = jnp.cumsum(sums) + base    # abs value after symbol i
+        total = head + cum_len[win - 1]
+
+        j = jnp.arange(max_elems, dtype=jnp.int32)
+        want = j - head + 1   # 1-based gap-element index; < 1 -> emit base
+        w = jnp.maximum(want, 1)
+        k = jnp.searchsorted(cum_len, w, side="left").astype(jnp.int32)
+        k = jnp.minimum(k, win - 1)
+        base_s = jnp.where(k > 0, cum_sum[jnp.maximum(k - 1, 0)], base)
+        base_t = jnp.where(k > 0, cum_len[jnp.maximum(k - 1, 0)], 0)
+        sym0 = syms[k]
+
+        def body(_, state):
+            sym, s, wrem = state
+            is_rule = sym >= T
+            l = jnp.where(is_rule, fi.sym_left[sym], sym)
+            r = jnp.where(is_rule, fi.sym_right[sym], sym)
+            ll = fi.sym_len[l]
+            go_left = wrem <= ll
+            nsym = jnp.where(go_left, l, r)
+            ns = jnp.where(go_left, s, s + fi.sym_sum[l])
+            nw = jnp.where(go_left, wrem, wrem - ll)
+            return (jnp.where(is_rule, nsym, sym),
+                    jnp.where(is_rule, ns, s),
+                    jnp.where(is_rule, nw, wrem))
+
+        symf, sf, _ = jax.lax.fori_loop(
+            0, fi.max_depth, body, (sym0, base_s, w - base_t))
+        vals = sf + fi.sym_sum[symf]
+        out = jnp.where(want < 1, base, vals)
+        return jnp.where(j < total, out, INT_INF).astype(jnp.int32)
+
+    return jax.vmap(one)(sym_lo, sym_hi, base, head)
+
+
+@jax.jit
+def accumulate_scores_device(idf_terms: jax.Array, doc_w_docs: jax.Array,
+                             member: jax.Array) -> jax.Array:
+    """Device twin of :func:`repro.core.jax_index.accumulate_scores`: the
+    same SEQUENTIAL float32 idf sum (segment-style masked adds in the
+    fixed ascending-term order — ``fori_loop`` keeps XLA from reassociating
+    it) followed by the single doc-weight multiply, so device scores are
+    bit-identical to the host reduction.  ``idf_terms`` (K,) f32 already
+    gathered per query term, ``doc_w_docs`` (D,) f32 per candidate doc,
+    ``member`` (K, D) bool."""
+    acc0 = jnp.zeros(member.shape[1], jnp.float32)
+
+    def body(k, acc):
+        return acc + jnp.where(member[k], idf_terms[k], jnp.float32(0.0))
+
+    acc = jax.lax.fori_loop(0, member.shape[0], body, acc0)
+    return (doc_w_docs * acc).astype(jnp.float32)
+
+
 def match_mask(vals: jax.Array, xs: jax.Array) -> jax.Array:
     """Keep probes that hit: INT_INF padding never matches."""
     return jnp.where((vals == xs) & (xs != INT_INF), xs, INT_INF)

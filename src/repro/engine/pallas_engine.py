@@ -31,6 +31,7 @@ from ..core.jax_index import (FlatIndex, PagedIndex, build_paged_index,
 from ..core.repair import RePairResult
 from ..kernels import should_interpret
 from ..kernels.list_intersect import ops as K
+from ..kernels.page_score import ops as PS
 from .base import Engine
 from .device import DeviceEngine
 
@@ -52,6 +53,37 @@ class PallasEngine(DeviceEngine):
                                                               page_size)
         self._tables, self._statics, self._host = K.pad_paged_operands(
             self.pi)
+        self._score_pack = None   # page_score operands, first ranked query
+
+    # -- ranked scoring (DESIGN.md §9) --------------------------------------
+
+    def page_elem_bucket(self) -> int:
+        """TILE_B-aligned row width for the grid-blocked decode kernel."""
+        m = max(1, int(self.score_index.max_page_elems))
+        return max(128, 1 << (m - 1).bit_length())
+
+    def decode_page_batch(self, entries) -> np.ndarray:
+        """Fused decode+score device path: page entries decode in one
+        grid-blocked ``page_score`` pallas_call (one stream page DMA'd
+        per entry — the block the pruning decision skipped never moves);
+        the membership probes that score the fresh candidates then ride
+        the fused ``list_intersect`` kernel, and the float32 reduction
+        runs on device.  Requires the score directory to be cut at this
+        engine's page boundaries; a foreign geometry falls back to the
+        windowed jnp decode (which reads the flat stream)."""
+        si = self.score_index
+        if int(si.page_size) != int(self.pi.page_size):
+            return super().decode_page_batch(entries)
+        if self._score_pack is None:
+            self._score_pack = PS.pad_score_operands(self.pi)
+        tables, statics = self._score_pack
+        e = np.asarray(entries, np.int64).ravel()
+        pages = si.pg_page[e].astype(np.int64)
+        slo = si.pg_sym_lo[e].astype(np.int64) - pages * int(si.page_size)
+        return PS.page_decode(
+            tables, statics, pages, slo, si.pg_sym_hi[e] - si.pg_sym_lo[e],
+            si.pg_base[e], si.pg_head[e], si.pg_count[e],
+            b_pad=self.page_elem_bucket(), interpret=self.interpret)
 
     def _next_geq_dev(self, list_ids, xs) -> np.ndarray:
         return K.next_geq_paged(self._tables, self._host,

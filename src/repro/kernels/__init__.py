@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for the hot spots of the Re-Pair index — five on
+"""Pallas TPU kernels for the hot spots of the Re-Pair index — six on
 the query side, one on the construction side (each: <name>.py
 pallas_call + BlockSpec, ops.py jit wrapper, ref.py oracle):
 
@@ -16,6 +16,13 @@ pallas_call + BlockSpec, ops.py jit wrapper, ref.py oracle):
                         page scheduling, one stream page per instance —
                         DESIGN.md §2.5); backs ``repro.engine.PallasEngine``
                         and is checked bit-exactly against the jnp engine.
+* ``page_score``      — RANKED retrieval's ScoreRound (DESIGN.md §9):
+                        block-max page-entry decode — one directory entry
+                        per grid step, its stream page scalar-prefetched,
+                        output tiled so gathers stay (TILE_B, width);
+                        backs ``PallasEngine.decode_page_batch`` and is
+                        checked bit-exactly against the windowed jnp
+                        positional descent.
 * ``pair_count``      — the CONSTRUCTION path (DESIGN.md §3.3): tiled
                         pair histogram over the working sequence with
                         revisited-block accumulators; backs

@@ -1,0 +1,9 @@
+"""Grid-blocked page-entry decode for ranked retrieval (DESIGN.md §9).
+
+``page_score.py`` holds the pallas_call; ``ops.py`` the operand pack +
+jit wrapper the engine calls.  The reference is the windowed jnp
+positional descent (``engine.jnp_backend.decode_pages_batch``), checked
+bit-exactly by tests/test_topk.py.
+"""
+
+from .ops import pad_score_operands, page_decode  # noqa: F401

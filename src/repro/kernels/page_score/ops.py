@@ -1,0 +1,79 @@
+"""Wrappers for the grid-blocked page-entry decode kernel.
+
+``pad_score_operands(pi)`` packs the device tables once per index —
+lane-padded grammar tables, the paged symbol/phrase-sum streams the
+probe kernel already keeps, plus one NEW paged table: the per-symbol
+expansion lengths (``sym_len[c]``) page-gathered on host, so the kernel
+reads element counts with the same one-page DMA discipline as values
+(gathering ``sym_len`` by symbol id in-kernel would cost a (PAGE, S)
+one-hot per instance; the pre-gathered page row costs nothing).
+
+``page_decode(...)`` is the numpy-in/numpy-out launch the engine calls
+per ScoreRound.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .. import should_interpret
+from ...core.jax_index import PagedIndex
+from ..list_intersect.ops import _pad1
+from .page_score import TILE_B, page_decode_pallas
+
+
+def pad_score_operands(pi: PagedIndex) -> tuple[tuple[jax.Array, ...], dict]:
+    """Kernel operand pack for one paged index: (tables, statics).
+    Compute once per index; PallasEngine caches it lazily on the first
+    ranked query."""
+    fl = pi.flat
+    c = np.asarray(fl.c, np.int64)
+    lens = np.asarray(fl.sym_len, np.int32)[c]
+    page = pi.page_size
+    pad = pi.num_pages * page - c.size
+    clens_pg = jnp.asarray(np.pad(lens, (0, pad)).reshape(-1, page))
+    tables = (
+        _pad1(fl.sym_left), _pad1(fl.sym_right), _pad1(fl.sym_sum),
+        _pad1(fl.sym_len),
+        pi.c_syms_pg.astype(jnp.int32), pi.c_sums_pg.astype(jnp.int32),
+        clens_pg,
+    )
+    statics = dict(max_depth=fl.max_depth, T=fl.num_terminals)
+    return tables, statics
+
+
+@partial(jax.jit, static_argnames=("max_depth", "T", "b_pad", "interpret"))
+def _call(tables: tuple[jax.Array, ...], pages: jax.Array, slo: jax.Array,
+          nsym: jax.Array, base: jax.Array, head: jax.Array,
+          cnt: jax.Array, *,
+          max_depth: int, T: int, b_pad: int, interpret: bool) -> jax.Array:
+    sleft, sright, ssum, slen, csyms_pg, csums_pg, clens_pg = tables
+    return page_decode_pallas(
+        pages, slo, nsym, base, head, cnt, sleft, sright, ssum, slen,
+        csyms_pg, csums_pg, clens_pg, max_depth=max_depth, T=T,
+        b_pad=b_pad, interpret=interpret)
+
+
+def page_decode(tables: tuple[jax.Array, ...], statics: dict,
+                pages: np.ndarray, slo: np.ndarray, nsym: np.ndarray,
+                base: np.ndarray, head: np.ndarray, cnt: np.ndarray, *,
+                b_pad: int, interpret: bool | None = None) -> np.ndarray:
+    """Decode a batch of page entries: (Q,) metadata arrays -> (Q, b_pad)
+    int32 doc ids, INT_INF padded.  ``b_pad`` must be a TILE_B multiple
+    (the engine's ``page_elem_bucket`` guarantees it); ``cnt`` is the
+    per-entry element count driving the output-tile guard."""
+    if interpret is None:
+        interpret = should_interpret()
+    if b_pad % TILE_B:
+        raise ValueError(f"b_pad {b_pad} not a multiple of {TILE_B}")
+    out = _call(tables, jnp.asarray(pages, jnp.int32),
+                jnp.asarray(slo, jnp.int32), jnp.asarray(nsym, jnp.int32),
+                jnp.asarray(base, jnp.int32), jnp.asarray(head, jnp.int32),
+                jnp.asarray(cnt, jnp.int32),
+                b_pad=b_pad, interpret=bool(interpret), **statics)
+    return np.asarray(out)

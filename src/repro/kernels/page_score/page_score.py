@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: block-max page-entry decode over the paged stream.
+
+The device half of ranked retrieval's ScoreRound (DESIGN.md §9): each
+entry of the block-max directory names one (list, stream page) slice —
+symbol window, running base value, head flag — and the kernel expands it
+to absolute doc ids without touching any other page.  This is the
+pruning payoff made physical: a skipped entry is a page that never
+enters VMEM.
+
+Grid ``(Q, b_pad // TILE_B)``:
+
+* axis 0 — one page entry per step; the entry's stream page id rides the
+  ``PrefetchScalarGridSpec`` scalar-prefetch operand and drives the
+  BlockSpec index_map of the three paged stream tables (symbols, phrase
+  sums, phrase lengths), so exactly ONE page per table is resident per
+  instance — the same DMA discipline as ``list_intersect``;
+* axis 1 — tiles of TILE_B output slots, so the one-hot gather matrices
+  stay (TILE_B, width) like the probe kernel's, never (b_pad, width).
+
+Per tile the kernel mirrors the jnp reference exactly: masked per-symbol
+lengths/sums over the entry's window, a prefix-sum pair (element count /
+absolute value after each symbol — ``jnp.cumsum`` on the (1, PAGE) row,
+the ``gap_decode`` precedent), a compare-count ``searchsorted`` locating
+each output slot's owning symbol, then the fixed-depth positional
+descent with per-node length counters.  All gathers are one-hot masked
+sums (exact in int32); grammar tables broadcast whole.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_B = 128
+INT_INF = 2**31 - 1  # plain int: jnp array constants can't be captured
+
+
+def _gather(table: jax.Array, idx: jax.Array, width: int) -> jax.Array:
+    """Exact int32 gather table[idx] via one-hot masked sum.
+    table (width,), idx (B,) -> (B,).  Out-of-range idx yields 0."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], width), 1)
+    onehot = idx[:, None] == iota
+    return jnp.sum(jnp.where(onehot, table[None, :], 0), axis=1)
+
+
+def _page_decode_kernel(pages_ref, slo_ref, nsym_ref, base_ref, head_ref,
+                        cnt_ref, sleft_ref, sright_ref, ssum_ref, slen_ref,
+                        csyms_ref, csums_ref, clens_ref, out_ref, *,
+                        max_depth: int, T: int, page: int, s_pad: int):
+    tb = pl.program_id(1)
+    # tile guard: rows are padded to the directory-wide max element count,
+    # but THIS entry decodes exactly cnt elements — tiles past it skip the
+    # prefix sums and the whole descent and just emit padding
+    out_ref[0, :] = jnp.full((1, TILE_B), INT_INF, jnp.int32)[0, :]
+
+    @pl.when(tb * TILE_B < cnt_ref[0, 0])
+    def _decode():
+        _page_decode_tile(tb, slo_ref, nsym_ref, base_ref, head_ref,
+                          sleft_ref, sright_ref, ssum_ref, slen_ref,
+                          csyms_ref, csums_ref, clens_ref, out_ref,
+                          max_depth=max_depth, T=T, page=page, s_pad=s_pad)
+
+
+def _page_decode_tile(tb, slo_ref, nsym_ref, base_ref, head_ref,
+                      sleft_ref, sright_ref, ssum_ref, slen_ref,
+                      csyms_ref, csums_ref, clens_ref, out_ref, *,
+                      max_depth: int, T: int, page: int, s_pad: int):
+    off0 = slo_ref[0, 0]
+    n = nsym_ref[0, 0]
+    base = base_ref[0, 0]
+    head = head_ref[0, 0]
+
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    in_span = (pos >= off0) & (pos < off0 + n)
+    syms = jnp.where(in_span, csyms_ref[0:1, :], 0)
+    lens = jnp.where(in_span, clens_ref[0:1, :], 0)
+    sums = jnp.where(in_span, csums_ref[0:1, :], 0)
+    cum_len = jnp.cumsum(lens, axis=1)          # gap elements after symbol
+    cum_sum = jnp.cumsum(sums, axis=1) + base   # abs value after symbol
+    total = head + cum_len[0, page - 1]
+
+    j = (jax.lax.broadcasted_iota(jnp.int32, (TILE_B, 1), 0)[:, 0]
+         + tb * TILE_B)                          # (TILE_B,) output slots
+    want = j - head + 1    # 1-based gap-element index; < 1 -> emit base
+    w = jnp.maximum(want, 1)
+    # searchsorted-left as a compare-count: first symbol whose cumulative
+    # element count reaches w (positions before the window count 0)
+    k = jnp.sum((cum_len < w[:, None]).astype(jnp.int32), axis=1)
+    k = jnp.minimum(k, page - 1)
+    base_s = jnp.where(k > 0, _gather(cum_sum[0, :], k - 1, page), base)
+    base_t = jnp.where(k > 0, _gather(cum_len[0, :], k - 1, page), 0)
+    sym0 = _gather(syms[0, :], k, page)
+
+    sleft = sleft_ref[0, :]
+    sright = sright_ref[0, :]
+    ssum = ssum_ref[0, :]
+    slen = slen_ref[0, :]
+
+    def body(_, state):
+        sym, s, wrem = state
+        is_rule = sym >= T
+        l = jnp.where(is_rule, _gather(sleft, sym, s_pad), sym)
+        r = jnp.where(is_rule, _gather(sright, sym, s_pad), sym)
+        ll = _gather(slen, l, s_pad)
+        go_left = wrem <= ll
+        nsym = jnp.where(go_left, l, r)
+        ns = jnp.where(go_left, s, s + _gather(ssum, l, s_pad))
+        nw = jnp.where(go_left, wrem, wrem - ll)
+        return (jnp.where(is_rule, nsym, sym),
+                jnp.where(is_rule, ns, s),
+                jnp.where(is_rule, nw, wrem))
+
+    symf, sf, _ = jax.lax.fori_loop(0, max_depth, body,
+                                    (sym0, base_s, w - base_t))
+    vals = sf + _gather(ssum, symf, s_pad)
+    out = jnp.where(want < 1, base, vals)
+    out_ref[0, :] = jnp.where(j < total, out, INT_INF).astype(jnp.int32)
+
+
+def page_decode_pallas(pages: jax.Array, slo: jax.Array, nsym: jax.Array,
+                       base: jax.Array, head: jax.Array, cnt: jax.Array,
+                       sleft: jax.Array,
+                       sright: jax.Array, ssum: jax.Array, slen: jax.Array,
+                       csyms_pg: jax.Array, csums_pg: jax.Array,
+                       clens_pg: jax.Array, *, max_depth: int, T: int,
+                       b_pad: int, interpret: bool = False) -> jax.Array:
+    """Fused page-entry decode.
+
+    ``pages`` (Q,) int32 stream page per entry (the scalar-prefetch
+    operand); ``slo/nsym/base/head/cnt`` (Q,) int32 per-entry metadata
+    (symbol offset IN the page, window length, running base, head flag,
+    element count — the tile guard); grammar tables 1-D lane-padded;
+    ``c*_pg`` (num_pages, PAGE) paged stream.  Returns (Q, b_pad) int32
+    doc ids, INT_INF padded — bit-exact vs
+    ``engine.jnp_backend.decode_pages_batch``."""
+    Q = slo.shape[0]
+    page = csyms_pg.shape[1]
+    s_pad = ssum.shape[0]
+    kernel = lambda *refs: _page_decode_kernel(
+        *refs, max_depth=max_depth, T=T, page=page, s_pad=s_pad)
+    mspec = pl.BlockSpec((1, 1), lambda q, tb, b: (0, q))
+    tspec = lambda a: pl.BlockSpec((1, a.shape[0]), lambda q, tb, b: (0, 0))
+    pgspec = pl.BlockSpec((1, page), lambda q, tb, b: (b[q], 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Q, b_pad // TILE_B),
+        in_specs=[mspec, mspec, mspec, mspec, mspec,
+                  tspec(sleft), tspec(sright), tspec(ssum), tspec(slen),
+                  pgspec, pgspec, pgspec],
+        out_specs=pl.BlockSpec((1, TILE_B), lambda q, tb, b: (q, tb)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, b_pad), jnp.int32),
+        interpret=interpret,
+    )(pages, slo[None, :], nsym[None, :], base[None, :], head[None, :],
+      cnt[None, :],
+      sleft[None, :], sright[None, :], ssum[None, :], slen[None, :],
+      csyms_pg, csums_pg, clens_pg)

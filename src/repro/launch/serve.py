@@ -22,7 +22,7 @@ import numpy as np
 def serve_queries(n_queries: int, engine: str = "jnp",
                   data_shards: int = 0, builder: str = "host",
                   refreshes: int = 0, query: str | None = None,
-                  concurrency: int = 0,
+                  concurrency: int = 0, topk: int = 0,
                   batch_window: int | None = None) -> None:
     from ..build import make_builder
     from ..index import zipf_corpus
@@ -105,6 +105,35 @@ def serve_queries(n_queries: int, engine: str = "jnp",
               f"merged dispatches (window {st['batch_window']}), "
               f"spot checks OK")
 
+    # ranked retrieval (DESIGN.md §9): BM25 top-k with block-max page
+    # pruning through the same coalescing scheduler; the telemetry window
+    # reports how many page decodes the admission bound refused
+    if topk:
+        from ..query import rank_oracle
+        srv.engine.score_page_size = 128   # fine directory: prunable pages
+        rngr = np.random.default_rng(2)
+        order = sorted(range(len(lists)), key=lambda i: -len(lists[i]))
+        p = np.arange(1, len(lists) + 1, dtype=np.float64) ** -1.1
+        p /= p.sum()
+        bags = [[int(order[r]) for r in
+                 rngr.choice(len(lists), size=int(nk), replace=False, p=p)]
+                for nk in rngr.integers(2, 5, size=16)]
+        srv.search_topk(bags[0], topk)    # compile + build the score tier
+        t0 = time.perf_counter()
+        routs = srv.search_topk_many(bags, topk)
+        dt = time.perf_counter() - t0
+        st = srv.serve_stats()
+        print(f"ranked top-{topk}: {len(bags)} queries in {dt*1e3:.1f} ms "
+              f"({len(bags)/dt:.0f} q/s), pages scored "
+              f"{st['pages_scored']} / skipped {st['pages_skipped']} "
+              f"(frac {st['pages_skipped_frac']:.3f}), final threshold "
+              f"{st['threshold_final']:.3f}")
+        for bag, got in list(zip(bags, routs))[::4]:
+            od, osc = rank_oracle(lists, res.universe, bag, topk)
+            np.testing.assert_array_equal(got.docs, od)
+            np.testing.assert_array_equal(got.scores, osc)
+        print("ranked spot checks OK (exact BM25 scores and order)")
+
     # boolean queries through the cost-based planner (DESIGN.md §7):
     # --query '(12 AND 40) OR NOT 7' — term ids address postings lists
     if query is not None:
@@ -184,6 +213,10 @@ def main() -> None:
                     help="run a Zipf boolean workload with this many "
                          "queries in flight through the coalescing "
                          "scheduler (0 = skip)")
+    ap.add_argument("--topk", type=int, default=0,
+                    help="run a ranked BM25 top-K workload with block-max "
+                         "page pruning and print the pruning telemetry "
+                         "(0 = skip)")
     ap.add_argument("--batch-window", type=int, default=None,
                     help="scheduler in-flight window (default: "
                          "--concurrency, or REPRO_BATCH_WINDOW)")
@@ -192,7 +225,7 @@ def main() -> None:
         serve_queries(args.n, args.engine, data_shards=args.data_shards,
                       builder=args.builder, refreshes=args.refresh,
                       query=args.query, concurrency=args.concurrency,
-                      batch_window=args.batch_window)
+                      topk=args.topk, batch_window=args.batch_window)
     else:
         serve_lm(args.arch, args.n)
 

@@ -22,11 +22,14 @@ from .ast import And, Node, Not, Or, Phrase, Term, terms_of, to_str, walk
 from .exec import QueryExecutor, naive_eval
 from .parser import QueryParseError, parse
 from .plan import ALGOS, ListStats, PlanNode, explain, make_plan
-from .steps import DecodeList, PhraseShift, ProbeRound, SetOp, drive
+from .steps import (DecodeList, PhraseShift, ProbeRound, ScoreRound, SetOp,
+                    drive)
+from .topk import RankedResult, lower_topk, rank_oracle, search_topk
 
 __all__ = [
     "And", "Node", "Not", "Or", "Phrase", "Term", "terms_of", "to_str",
     "walk", "QueryExecutor", "naive_eval", "QueryParseError", "parse",
     "ALGOS", "ListStats", "PlanNode", "explain", "make_plan",
-    "ProbeRound", "DecodeList", "SetOp", "PhraseShift", "drive",
+    "ProbeRound", "ScoreRound", "DecodeList", "SetOp", "PhraseShift",
+    "drive", "RankedResult", "lower_topk", "rank_oracle", "search_topk",
 ]

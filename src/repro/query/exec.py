@@ -47,7 +47,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.jax_index import INT_INF
-from .ast import Node, Phrase, Term
+from .ast import And, Node, Not, Or, Phrase, Term, terms_of
 from .parser import parse
 from .plan import ListStats, PlanNode, make_plan
 from .steps import DecodeList, PhraseShift, ProbeRound, SetOp, drive
@@ -106,6 +106,26 @@ class QueryExecutor:
         node = parse(q, self.term_map) if isinstance(q, str) else q
         return make_plan(node, self.stats, self.force_algo,
                          probe_terms=self.stride is None)
+
+    def topk(self, q, k: int, *, prune: bool = True):
+        """Ranked top-k retrieval (DESIGN.md §9): the query — a string, an
+        AST node, or a plain term-id bag — is flattened to its bag of
+        words and driven through the block-max MaxScore machine
+        (``topk.lower_topk``) on this executor's engine.  Returns a
+        :class:`~repro.query.topk.RankedResult`."""
+        from .topk import lower_topk
+        return drive(lower_topk(self.engine.score_index,
+                                self.query_terms(q), k, prune=prune),
+                     self.engine)
+
+    def query_terms(self, q) -> list[int]:
+        """Bag of words of a query in any accepted form (string / AST /
+        term-id sequence) — ranked retrieval ignores boolean structure."""
+        if isinstance(q, str):
+            return terms_of(parse(q, self.term_map))
+        if isinstance(q, (And, Or, Not, Phrase, Term)):
+            return terms_of(q)
+        return [int(t) for t in q]
 
     def lower(self, plan: PlanNode):
         """The plan as a resumable step machine (DESIGN.md §8.1): a

@@ -8,13 +8,16 @@ steps, which is what lets the serving scheduler interleave many queries
 and coalesce their probe workloads into shared device dispatches
 (``repro.serve.scheduler``).
 
-Four step types:
+Five step types:
 
 * :class:`ProbeRound`  — a pending batched ``next_geq`` workload as flat
   ``(list_ids, xs)`` arrays plus the algorithm ("svs" → bucket+skip
-  probes, "bys" → compressed binary search).  The ONLY step that touches
-  an engine; everything the scheduler merges across queries is a
-  ProbeRound.
+  probes, "bys" → compressed binary search).
+* :class:`ScoreRound`  — a pending batched page-entry decode of a ranked
+  top-k query (DESIGN.md §9.4): block-max page-entry ids whose documents
+  the driver materializes through ``engine.dispatch_score_round``.
+  ProbeRound and ScoreRound are the two steps that touch an engine, and
+  both merge across queries in the serving scheduler.
 * :class:`DecodeList`  — one whole-list expansion (merge/union/complement
   operands), served from the per-index decoded-list cache.
 * :class:`SetOp`       — a host set-algebra combination of materialized
@@ -35,7 +38,8 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["ProbeRound", "DecodeList", "SetOp", "PhraseShift", "drive"]
+__all__ = ["ProbeRound", "ScoreRound", "DecodeList", "SetOp",
+           "PhraseShift", "drive"]
 
 
 @dataclasses.dataclass
@@ -55,6 +59,23 @@ class ProbeRound:
     @property
     def size(self) -> int:
         return int(self.list_ids.size)
+
+
+@dataclasses.dataclass
+class ScoreRound:
+    """Pending page-entry decodes of one suspended ranked query
+    (DESIGN.md §9.4).  ``entries`` index the engine's
+    :class:`~repro.core.jax_index.ScoreIndex` block-max directory; the
+    driver answers with a ``(Q, B)`` int32 doc-id matrix (``INT_INF``
+    padding past each entry's element count).  Elementwise in the entry
+    lanes like ProbeRound, so the scheduler concatenates the ScoreRounds
+    of all in-flight ranked queries into one merged decode dispatch."""
+
+    entries: np.ndarray               # (Q,) int32 page-entry ids
+
+    @property
+    def size(self) -> int:
+        return int(self.entries.size)
 
 
 @dataclasses.dataclass
@@ -128,6 +149,8 @@ def drive(machine, engine) -> np.ndarray:
             if isinstance(step, ProbeRound):
                 res = engine.dispatch_round(step.list_ids, step.xs,
                                             step.algo)
+            elif isinstance(step, ScoreRound):
+                res = engine.dispatch_score_round(step.entries)
             elif isinstance(step, DecodeList):
                 res = engine.decode_list(step.t)
             else:

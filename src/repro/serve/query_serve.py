@@ -40,6 +40,11 @@ on it and flushed, so a hot rebuild can never serve a stale answer
 ``search_many`` coalesce the probe rounds of all in-flight queries into
 shared device dispatches; the single-query ``search`` is a one-entry
 scheduler run, so there is exactly one execution path.
+
+**Ranked retrieval** (DESIGN.md §9): ``search_topk(q, k)`` runs BM25
+top-k with block-max page pruning through the same scheduler — page
+decodes merge across ranked queries, membership probes merge with
+boolean traffic, and ``serve_stats()`` reports pages scored vs skipped.
 """
 
 from __future__ import annotations
@@ -189,9 +194,32 @@ class QueryServer:
         share one execution path."""
         return self.scheduler.search_many([q], force_algo)[0]
 
+    # -- ranked retrieval (DESIGN.md §9) -------------------------------------
+
+    def submit_topk(self, q, k: int = 10, *, prune: bool = True) -> int:
+        """Enqueue a ranked top-k query (query string, AST node, or term
+        id sequence — only the term bag matters); ``scheduler.take(qid)``
+        yields a :class:`~repro.query.topk.RankedResult`."""
+        return self.scheduler.submit_topk(q, k, prune=prune)
+
+    def search_topk_many(self, queries: Sequence, k: int = 10, *,
+                         prune: bool = True):
+        """Coalesced ranked execution: the block-max page decodes of all
+        in-flight queries merge into shared ScoreRound dispatches, their
+        membership probes into the boolean probe groups."""
+        return self.scheduler.search_topk_many(queries, k, prune=prune)
+
+    def search_topk(self, q, k: int = 10, *, prune: bool = True):
+        """BM25 top-k through the serving runtime (block-max pruned by
+        default; ``prune=False`` scores every page — same ranking, more
+        pages touched)."""
+        return self.scheduler.search_topk(q, k, prune=prune)
+
     def serve_stats(self) -> dict:
         """Scheduler counters: qps, latency percentiles, coalescing
-        factor, cache hit rates (DESIGN.md §8.4)."""
+        factor, cache hit rates, and the ranked-retrieval pruning
+        counters (pages scored/skipped, last final threshold —
+        DESIGN.md §8.4/§9.4)."""
         return self.scheduler.stats()
 
     def plan(self, q: str | Node) -> PlanNode:

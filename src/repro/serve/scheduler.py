@@ -23,13 +23,24 @@ dispatch returns bit-identical values to per-query dispatches — the
 differential gate in ``tests/test_scheduler.py`` holds the whole runtime
 to that.
 
+Ranked top-k queries (DESIGN.md §9) ride the SAME loop: ``submit_topk``
+parks a :func:`~repro.query.topk.lower_topk` machine whose
+:class:`ScoreRound` page decodes merge across queries exactly like probe
+rounds (one ``dispatch_score_round`` per engine per tick) and whose
+membership probes merge with boolean traffic in the "svs" probe group.
+The heap — and the pruning threshold it carries — lives in the
+generator frame, so pruning decisions straddle scheduler ticks.
+
 Two caches ride the tick loop, both keyed on the **index version** and
 flushed by ``QueryServer.swap_index`` so hot rebuilds stay correct
 (DESIGN.md §8.3): a decoded-list LRU serving ``DecodeList`` steps across
 queries, and a query-result LRU short-circuiting repeated queries (Zipf
-workloads repeat the head constantly).  In-flight queries pin the engine
-and version they were planned against, so a mid-workload swap never mixes
-indexes inside one machine.
+workloads repeat the head constantly).  Result keys carry the query
+MODE ("bool"/"topk") and, for ranked queries, the term bag, ``k`` and
+the pruning flag — a boolean query and a ranked query over the same
+terms, or the same ranked query at two ``k``, can never collide.
+In-flight queries pin the engine and version they were planned against,
+so a mid-workload swap never mixes indexes inside one machine.
 """
 
 from __future__ import annotations
@@ -45,7 +56,8 @@ from ..core.cache import LRUCache
 from ..query import QueryExecutor
 from ..query.parser import parse
 from ..query.plan import ListStats
-from ..query.steps import DecodeList, ProbeRound
+from ..query.steps import DecodeList, ProbeRound, ScoreRound
+from ..query.topk import RankedResult, lower_topk
 
 #: in-flight window of the microbatcher (env ``REPRO_BATCH_WINDOW``);
 #: 1 degenerates to serial execution — the CI matrix pins that
@@ -102,6 +114,11 @@ class QueryScheduler:
         self._dispatches = 0
         self._completed = 0
         self.failures = 0
+        # ranked-retrieval counters (cumulative; survive hot swaps so a
+        # long-lived server's pruning efficacy is observable end to end)
+        self.pages_scored = 0
+        self.pages_skipped = 0
+        self.threshold_final = 0.0   # θ of the most recent ranked query
         self._next_qid = 0
         self._queue: deque[_InFlight] = deque()
         self._running: list[_InFlight] = []
@@ -152,13 +169,35 @@ class QueryScheduler:
         t0 = time.perf_counter()
         ex = self._executor(force_algo)
         node = parse(q, ex.term_map) if isinstance(q, str) else q
-        key = (self._version, force_algo, node)
+        key = (self._version, "bool", force_algo, node)
         hit = self.result_cache.get(key)
         if hit is not None:
             self._finish(qid, hit.copy(), t0)
             return qid
         fl = _InFlight(qid, ex.lower(ex.plan(node)), self._engine,
                        self._version, key, t0)
+        self._queue.append(fl)
+        return fl.qid
+
+    def submit_topk(self, q, k: int = 10, *, prune: bool = True) -> int:
+        """Enqueue one ranked top-k query (a term bag — a query string,
+        an AST node, or a term-id sequence; only its terms matter).  The
+        result is a :class:`~repro.query.topk.RankedResult` from
+        :meth:`take`.  The cache key folds in the scoring mode, the term
+        bag, ``k`` AND the pruning flag, so ranked results never collide
+        with boolean results or with each other across ``k``."""
+        qid = self._next_qid
+        self._next_qid += 1
+        t0 = time.perf_counter()
+        terms = tuple(self._executor(None).query_terms(q))
+        key = (self._version, "topk", terms, int(k), bool(prune))
+        hit = self.result_cache.get(key)
+        if hit is not None:
+            self._finish(qid, hit.copy(), t0)
+            return qid
+        fl = _InFlight(qid, lower_topk(self._engine.score_index, terms,
+                                       int(k), prune=prune),
+                       self._engine, self._version, key, t0)
         self._queue.append(fl)
         return fl.qid
 
@@ -176,20 +215,29 @@ class QueryScheduler:
             fl = self._queue.popleft()
             self._running.append(fl)
             self._advance(fl, None, start=True)
-        groups: dict[tuple[int, str], list[_InFlight]] = {}
+        groups: dict[tuple, list[_InFlight]] = {}
         for fl in self._running:
             if fl.pending is not None:
-                groups.setdefault((id(fl.engine), fl.pending.algo),
-                                  []).append(fl)
+                tag = (("score",) if isinstance(fl.pending, ScoreRound)
+                       else ("probe", fl.pending.algo))
+                groups.setdefault((id(fl.engine),) + tag, []).append(fl)
         first_err: BaseException | None = None
-        for (_, algo), fls in groups.items():
+        for gkey, fls in groups.items():
             rounds = [fl.pending for fl in fls]
-            lids = np.concatenate([r.list_ids for r in rounds])
-            xs = np.concatenate([r.xs for r in rounds])
             self._dispatch_widths.append(len(fls))
             self._dispatches += 1
-            self._merged_lanes += int(lids.size)
-            vals = np.asarray(fls[0].engine.dispatch_round(lids, xs, algo))
+            if gkey[1] == "score":      # merged ranked page decode
+                entries = np.concatenate([r.entries for r in rounds])
+                self._merged_lanes += int(entries.size)
+                vals = np.asarray(
+                    fls[0].engine.dispatch_score_round(entries))
+            else:
+                algo = gkey[2]
+                lids = np.concatenate([r.list_ids for r in rounds])
+                xs = np.concatenate([r.xs for r in rounds])
+                self._merged_lanes += int(lids.size)
+                vals = np.asarray(
+                    fls[0].engine.dispatch_round(lids, xs, algo))
             off = 0
             for fl, r in zip(fls, rounds):
                 seg = vals[off:off + r.size]
@@ -219,7 +267,7 @@ class QueryScheduler:
         try:
             step = next(fl.machine) if start else fl.machine.send(value)
             while True:
-                if isinstance(step, ProbeRound):
+                if isinstance(step, (ProbeRound, ScoreRound)):
                     fl.pending = step
                     return
                 if isinstance(step, DecodeList):
@@ -229,6 +277,19 @@ class QueryScheduler:
                 step = fl.machine.send(res)
         except StopIteration as stop:
             fl.done = True
+            if isinstance(stop.value, RankedResult):
+                rr: RankedResult = stop.value
+                self.pages_scored += rr.pages_scored
+                self.pages_skipped += rr.pages_skipped
+                if rr.threshold > float("-inf"):
+                    self.threshold_final = float(rr.threshold)
+                if fl.key is not None and self.result_cache.maxsize > 0:
+                    cached = rr.copy()
+                    cached.docs.flags.writeable = False
+                    cached.scores.flags.writeable = False
+                    self.result_cache.put(fl.key, cached)
+                self._finish(fl.qid, rr, fl.t0)
+                return
             out = np.asarray(stop.value, dtype=np.int64)
             out = out if out.flags.writeable else out.copy()
             if fl.key is not None and self.result_cache.maxsize > 0:
@@ -293,6 +354,24 @@ class QueryScheduler:
             raise
         return [self.take(qid) for qid in qids]
 
+    def search_topk_many(self, queries: Sequence, k: int = 10, *,
+                         prune: bool = True) -> list[RankedResult]:
+        """Coalesced ranked execution of a workload: page-decode rounds
+        merge across the in-flight queries (and their membership probes
+        merge with any boolean traffic).  Results in submit order; same
+        all-or-nothing cancellation as :meth:`search_many`."""
+        qids = [self.submit_topk(q, k, prune=prune) for q in queries]
+        try:
+            self.drain()
+        except BaseException:
+            self._cancel(set(qids))
+            raise
+        return [self.take(qid) for qid in qids]
+
+    def search_topk(self, q, k: int = 10, *, prune: bool = True
+                    ) -> RankedResult:
+        return self.search_topk_many([q], k, prune=prune)[0]
+
     def _cancel(self, qids: set[int]) -> None:
         """Retire a batch: drop its queued/in-flight machines and release
         any results it already completed."""
@@ -331,6 +410,12 @@ class QueryScheduler:
             "p95_ms": float(np.percentile(lat, 95) * 1e3) if lat.size else 0.0,
             "dispatches": self._dispatches,
             "merged_lanes": self._merged_lanes,
+            "pages_scored": self.pages_scored,
+            "pages_skipped": self.pages_skipped,
+            "pages_skipped_frac": (
+                self.pages_skipped
+                / max(self.pages_scored + self.pages_skipped, 1)),
+            "threshold_final": float(self.threshold_final),
             "coalescing_factor": (float(np.mean(widths))
                                   if widths else 0.0),
             "decode_cache": self.decode_cache.stats(),
