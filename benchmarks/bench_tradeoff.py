@@ -1,8 +1,25 @@
-"""Paper Fig. 4 (left): time/space tradeoff — vary sampling density for
-Re-Pair (a)/(b) and byte codes; report (bits/posting, us/query) pairs for
-runs with 100 <= n/m <= 200 (the paper's window)."""
+"""Time/space tradeoff, two axes (DESIGN.md §10.1):
+
+* fig4-left — the paper's sweep: vary sampling density for Re-Pair
+  (a)/(b) and byte codes; report (bits/posting, us/query) pairs for
+  runs with 100 <= n/m <= 200 (the paper's window).
+* codec axis — force the per-list codec tier to each mode in
+  {repair, ef, bitmap, adaptive} and run the SAME Zipf boolean workload
+  through the coalescing scheduler on the host engine; report
+  (bits/posting, us/query) per mode.  Every query is oracle-checked
+  against ``naive_eval`` on a warmup pass before timing, so a timing can
+  never come from a wrong answer.  The acceptance headline: adaptive
+  must Pareto-dominate or match all-Re-Pair on (bits, time) — the
+  space side is structural (the selector refuses bits-inflating picks),
+  and ``main()`` asserts it from the measured rows.
+
+  PYTHONPATH=src python -m benchmarks.run --only tradeoff
+  PYTHONPATH=src python -m benchmarks.bench_tradeoff
+"""
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -11,11 +28,18 @@ from repro.core import intersect as I
 from repro.core.dictionary import build_forest
 from repro.core.repair import repair_compress
 from repro.core.sampling import build_a_sampling, build_b_sampling
+from repro.engine import make_engine
+from repro.index.codec_tier import MODES, CodecTier
+from repro.query import naive_eval
+from repro.serve.scheduler import QueryScheduler
 
-from .common import corpus_lists, emit, time_us
+from .common import BENCH_SEED, boolean_workload, corpus_lists, emit, time_us
+
+#: queries per codec mode on the scheduler path (oracle-checked first)
+N_CODEC_QUERIES = 48
 
 
-def run() -> list[dict]:
+def run_fig4() -> list[dict]:
     lists, u = corpus_lists()
     n_post = sum(len(l) for l in lists)
     res = repair_compress(lists)
@@ -78,12 +102,63 @@ def run() -> list[dict]:
     return rows
 
 
-def main() -> None:
-    rows = run()
+def run_codecs(n_queries: int = N_CODEC_QUERIES) -> list[dict]:
+    lists, _ = corpus_lists()
+    res = repair_compress(lists)
+    queries = boolean_workload(len(lists), [len(l) for l in lists],
+                               n_queries=n_queries)
+    oracle = [naive_eval(q, lists, res.universe) for q in queries]
+
+    rows = []
+    for mode in MODES:
+        eng = make_engine("host", res, codec=mode)
+        tier = eng.tier or CodecTier(
+            mode="repair", codec=np.zeros(res.num_lists, np.int8),
+            ef=None, bm=None, universe=res.universe)
+        rep = tier.space_report(res)
+        # warmup + oracle gate before the timed pass
+        warm = QueryScheduler(eng, batch_window=8, result_cache_size=0)
+        for got, want in zip(warm.search_many(queries), oracle):
+            np.testing.assert_array_equal(got, want)
+        sch = QueryScheduler(eng, batch_window=8, result_cache_size=0)
+        t0 = time.perf_counter()
+        sch.search_many(queries)
+        dt = time.perf_counter() - t0
+        counts = tier.counts()
+        rows.append({
+            "codec": mode,
+            "bits_per_posting": rep["bits_per_posting"],
+            "us_per_query": 1e6 * dt / len(queries),
+            "qps": len(queries) / dt,
+            "n_queries": len(queries),
+            "n_repair": counts["repair"],
+            "n_ef": counts["ef"],
+            "n_bitmap": counts["bitmap"],
+        })
+        emit(rows[-1:], f"codec={mode}")
+        # per-codec round telemetry (warmup + timed), for the record
+        rows[-1]["dispatches"] = dict(eng.codec_dispatches)
+    return rows
+
+
+def main() -> dict:
+    fig4 = run_fig4()
     # Re-Pair variants use less space than the matching vbyte density
-    rp = min(r["bits_per_posting"] for r in rows if r["method"].startswith("repair"))
-    vb = min(r["bits_per_posting"] for r in rows if r["method"].startswith("vbyte"))
+    rp = min(r["bits_per_posting"] for r in fig4 if r["method"].startswith("repair"))
+    vb = min(r["bits_per_posting"] for r in fig4 if r["method"].startswith("vbyte"))
     assert rp < vb
+
+    codec = run_codecs()
+    by = {r["codec"]: r for r in codec}
+    # adaptive never inflates space over all-Re-Pair (Pareto guard)
+    assert by["adaptive"]["bits_per_posting"] <= by["repair"]["bits_per_posting"]
+    return {
+        "seed": BENCH_SEED,
+        "rows": fig4,
+        "codec_rows": codec,
+        "bits_per_posting": {r["codec"]: r["bits_per_posting"] for r in codec},
+        "us_per_query": {r["codec"]: r["us_per_query"] for r in codec},
+    }
 
 
 if __name__ == "__main__":

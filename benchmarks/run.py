@@ -26,7 +26,8 @@ BENCHES = {
     "boolean": "benchmarks.bench_boolean",
     "serve": "benchmarks.bench_serve",
     "topk": "benchmarks.bench_topk",
-    "fig4": "benchmarks.bench_tradeoff",
+    "tradeoff": "benchmarks.bench_tradeoff",
+    "fig4": "benchmarks.bench_tradeoff",     # legacy alias for tradeoff
     "hybrid": "benchmarks.bench_bitmap_hybrid",
     "optimize": "benchmarks.bench_optimize",
     "roofline": "benchmarks.roofline",
@@ -46,8 +47,12 @@ def main() -> None:
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(BENCHES))
     failures = 0
+    seen: set[str] = set()      # aliases map to one module; run it once
     for name in names:
         mod_name = BENCHES[name]
+        if mod_name in seen:
+            continue
+        seen.add(mod_name)
         print(f"\n{'='*70}\n== {name}  ({mod_name})\n{'='*70}")
         t0 = time.perf_counter()
         try:

@@ -28,6 +28,15 @@ point (DESIGN.md §8.2): one merged probe round — the concatenated
 ProbeRound workloads of every in-flight query — routed to
 ``next_geq_batch``/``next_geq_bys_batch``, padded to a power-of-two
 bucket on the device engines so merged sizes reuse O(log Q) jit entries.
+
+**Codec tier** (DESIGN.md §10): constructed with ``codec`` (or under
+``REPRO_CODEC``), the engine carries a per-list codec assignment
+(Re-Pair / Elias-Fano / bitmap).  The public probe entry points split
+each round's lanes by codec and dispatch every sub-round through that
+codec's ``next_geq`` path; with no tier (the default) the classic
+Re-Pair path runs with zero overhead.  The Re-Pair structures remain
+the decode ground truth in every mode — the tier is a probe-path and
+space overlay, so results are bit-identical across assignments.
 """
 
 from __future__ import annotations
@@ -59,7 +68,8 @@ class Engine(abc.ABC):
     #: the LRU evicts them as new decodes land.
     index_version: int = 0
 
-    def __init__(self, res: RePairResult):
+    def __init__(self, res: RePairResult,
+                 codec: "str | object | None" = None):
         self.res = res
         self.lengths = np.asarray(res.orig_lengths, dtype=np.int64)
         self._decoded = LRUCache(DECODE_CACHE_SIZE)
@@ -68,25 +78,74 @@ class Engine(abc.ABC):
         #: assign before the first ranked query to trade directory size
         #: against pruning resolution (tests/benchmarks pin 128 here)
         self.score_page_size: int | None = None
+        # per-list codec tier (DESIGN.md §10): None in pure-repair mode;
+        # a prebuilt CodecTier instance passes through so servers share
+        # one tier across engine rebuilds
+        from ..index.codec_tier import build_codec_tier
+        self.tier = build_codec_tier(res, codec)
+        #: bounded, version-keyed LRU for the EF select samples and the
+        #: derived device packs — the same ``REPRO_DECODE_CACHE`` bound
+        #: and ``index_version`` keying as the decode LRU, so a hot swap
+        #: orphans stale packs and the LRU evicts them (DESIGN.md §10.2)
+        self._ef_sel = LRUCache(DECODE_CACHE_SIZE)
+        #: per-codec sub-dispatch telemetry, surfaced by the scheduler
+        self.codec_dispatches = {"repair": 0, "ef": 0, "bitmap": 0}
 
     # -- point operations ---------------------------------------------------
 
     @abc.abstractmethod
+    def _next_geq_repair(self, list_ids: np.ndarray,
+                         xs: np.ndarray) -> np.ndarray:
+        """(Q,) int32 values over the Re-Pair structures; INT_INF where
+        no element >= x exists.  The backend-specific probe primitive."""
+
     def next_geq_batch(self, list_ids: np.ndarray,
                        xs: np.ndarray) -> np.ndarray:
-        """(Q,) int32 values; INT_INF where no element >= x exists."""
+        """(Q,) int32 values; INT_INF where no element >= x exists.  With
+        a codec tier, lanes split by their list's codec and each
+        sub-batch runs that codec's probe path."""
+        if self.tier is None:
+            return np.asarray(self._next_geq_repair(list_ids, xs))
+        return self._route_codecs(list_ids, xs, "svs")
 
     def member_batch(self, list_ids: np.ndarray, xs: np.ndarray) -> np.ndarray:
-        return self.next_geq_batch(list_ids, xs) == np.asarray(xs)
+        """Boolean membership per lane.  Bitmap-coded lists answer with a
+        single word test — no probe, no decode (DESIGN.md §10.3); all
+        other lanes reduce to ``next_geq == x``."""
+        lids = np.asarray(list_ids).ravel()
+        xq = np.asarray(xs).ravel()
+        if self.tier is None or self.tier.bm is None:
+            return np.asarray(self.next_geq_batch(lids, xq)) == xq
+        from ..index.codec_tier import CODEC_BITMAP, bitmap_member_np
+        codes = self.tier.codec[lids.astype(np.int64)]
+        out = np.zeros(lids.size, dtype=bool)
+        bm = np.flatnonzero(codes == CODEC_BITMAP)
+        rest = np.flatnonzero(codes != CODEC_BITMAP)
+        if rest.size:
+            out[rest] = (np.asarray(self.next_geq_batch(lids[rest],
+                                                        xq[rest]))
+                         == xq[rest])
+        if bm.size:
+            out[bm] = bitmap_member_np(self.tier.bm, lids[bm], xq[bm])
+        return out
 
     def next_geq_bys_batch(self, list_ids: np.ndarray,
                            xs: np.ndarray) -> np.ndarray:
-        """Batched Baeza-Yates-style binary-search next_geq [BY04].  The
-        base implementation bisects the DECODED list (the classic
-        uncompressed baseline); device engines override it with a
-        positional bisection of the compressed stream's phrase-sum prefix
-        table (``jnp_backend.next_geq_bys_batch``).  Same contract as
-        ``next_geq_batch``: (Q,) int32, INT_INF where no element >= x."""
+        """Batched Baeza-Yates-style binary-search next_geq [BY04]; same
+        contract as ``next_geq_batch``.  Non-repair lanes route to their
+        codec path — EF and bitmap probes ARE position-searches already,
+        so "bys" only differentiates the repair lanes."""
+        if self.tier is None:
+            return np.asarray(self._next_geq_repair_bys(list_ids, xs))
+        return self._route_codecs(list_ids, xs, "bys")
+
+    def _next_geq_repair_bys(self, list_ids: np.ndarray,
+                             xs: np.ndarray) -> np.ndarray:
+        """Repair-lane [BY04] probe: the base implementation bisects the
+        DECODED list (the classic uncompressed baseline); device engines
+        override it with a positional bisection of the compressed
+        stream's phrase-sum prefix table
+        (``jnp_backend.next_geq_bys_batch``)."""
         lids = np.asarray(list_ids)
         xq = np.asarray(xs, np.int64)
         out = np.full(lids.shape, int(INT_INF), dtype=np.int64)
@@ -108,14 +167,74 @@ class Engine(abc.ABC):
         to the matching primitive — ``"svs"`` → ``next_geq_batch``,
         ``"bys"`` → ``next_geq_bys_batch``.  Both are elementwise in the
         (list, probe) pairs, so concatenating the rounds of many queries
-        into one dispatch returns bit-identical values per lane; device
-        engines additionally pad merged rounds to power-of-two buckets
+        into one dispatch returns bit-identical values per lane.
+
+        With a codec tier the merged round is **split by (codec, algo)
+        into sub-rounds** (DESIGN.md §10.3): each sub-round dispatches
+        through its codec's ``next_geq`` path, so a tick of mixed-codec
+        queries costs one dispatch per (engine, codec, algo).  Device
+        engines pad every sub-round to a power-of-two bucket
         (DESIGN.md §8.2) so arbitrary merged sizes reuse O(log Q) jit
-        entries.  The host tier dispatches unpadded — its loop would pay
+        entries; the host tier dispatches unpadded — its loop would pay
         for the dead lanes."""
+        lids = np.asarray(list_ids, np.int32).ravel()
+        xq = np.asarray(xs, np.int32).ravel()
+        if lids.size == 0:
+            return np.empty(0, dtype=np.int32)
+        if self.tier is None:
+            self.codec_dispatches["repair"] += 1
+            return np.asarray(self._dispatch_codec(0, lids, xq, algo))
+        return self._route_codecs(lids, xq, algo)
+
+    def _route_codecs(self, list_ids, xs, algo: str) -> np.ndarray:
+        """Split lanes by their list's codec; one sub-dispatch each."""
+        from ..index.codec_tier import CODEC_NAMES
+        lids = np.asarray(list_ids, np.int32).ravel()
+        xq = np.asarray(xs, np.int32).ravel()
+        codes = self.tier.codec[lids.astype(np.int64)]
+        out = np.empty(lids.size, dtype=np.int32)
+        for c in np.unique(codes):
+            m = np.flatnonzero(codes == c)
+            out[m] = np.asarray(
+                self._dispatch_codec(int(c), lids[m], xq[m], algo))
+            self.codec_dispatches[CODEC_NAMES[int(c)]] += 1
+        return out
+
+    def _dispatch_codec(self, codec: int, lids: np.ndarray, xq: np.ndarray,
+                        algo: str) -> np.ndarray:
+        """One single-codec sub-round (host tier: unpadded; the device
+        override pads to the pow2 bucket before delegating here)."""
+        if codec == 1:                       # CODEC_EF
+            return self._ef_next_geq(lids, xq)
+        if codec == 2:                       # CODEC_BITMAP
+            return self._bitmap_next_geq(lids, xq)
         if algo == "bys":
-            return np.asarray(self.next_geq_bys_batch(list_ids, xs))
-        return np.asarray(self.next_geq_batch(list_ids, xs))
+            return np.asarray(self._next_geq_repair_bys(lids, xq))
+        return np.asarray(self._next_geq_repair(lids, xq))
+
+    # -- codec-tier probe paths (DESIGN.md §10) ------------------------------
+
+    def _ef_pack(self) -> dict:
+        """Select samples (+ backend packs) for the EF store, cached in
+        the bounded version-keyed LRU (the PR 5 swap-eviction contract)."""
+        key = (self.index_version, "ef")
+        pack = self._ef_sel.get(key)
+        if pack is None:
+            pack = self._build_ef_pack()
+            self._ef_sel.put(key, pack)
+        return pack
+
+    def _build_ef_pack(self) -> dict:
+        return {"samples": self.tier.ef.select_samples()}
+
+    def _ef_next_geq(self, lids, xq) -> np.ndarray:
+        from ..core import ef as EF
+        return EF.ef_next_geq_np(self.tier.ef, self._ef_pack()["samples"],
+                                 lids, xq)
+
+    def _bitmap_next_geq(self, lids, xq) -> np.ndarray:
+        from ..index.codec_tier import bitmap_next_geq_np
+        return bitmap_next_geq_np(self.tier.bm, lids, xq)
 
     # -- whole-list decode ---------------------------------------------------
 

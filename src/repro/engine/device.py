@@ -173,8 +173,9 @@ class DeviceEngine(Engine):
     def __init__(self, res: RePairResult, fi: FlatIndex | None = None,
                  max_short_len: int = 256, B: int = 8,
                  fallback: Engine | None = None,
-                 mesh: Mesh | None = None, mesh_axis: str = "data"):
-        super().__init__(res)
+                 mesh: Mesh | None = None, mesh_axis: str = "data",
+                 codec=None):
+        super().__init__(res, codec=codec)
         self.fi = fi if fi is not None else build_flat_index(res, B=B)
         self.max_short_len = max_short_len
         self._B = B
@@ -216,49 +217,86 @@ class DeviceEngine(Engine):
     #: least this many lanes (DESIGN.md §8.2)
     ROUND_BUCKET_MIN = 16
 
-    def dispatch_round(self, list_ids: np.ndarray, xs: np.ndarray,
-                       algo: str = "svs") -> np.ndarray:
+    def _dispatch_codec(self, codec: int, lids: np.ndarray, xq: np.ndarray,
+                        algo: str) -> np.ndarray:
         """Merged-round padding convention for the device tier: the
         scheduler concatenates the pending rounds of every in-flight
-        query, so the flat size varies tick to tick.  Pad with no-op
-        lanes — ``(list 0, probe 0)`` — up to the next power of two (min
-        ``ROUND_BUCKET_MIN``) and slice the answers back, so every jitted
-        probe program (flat, paged, shard_map, pallas) sees O(log Q)
-        distinct shapes instead of one per merged size."""
-        lids = np.asarray(list_ids, np.int32).ravel()
-        xq = np.asarray(xs, np.int32).ravel()
+        query, so each (codec, algo) sub-round's flat size varies tick to
+        tick.  Pad up to the next power of two (min ``ROUND_BUCKET_MIN``)
+        by repeating the sub-round's first lane — a real (list, probe) of
+        THIS codec, so the pad lanes stay inside the codec's own tables —
+        and slice the answers back: every jitted probe program (flat,
+        paged, shard_map, pallas, ef, bitmap) sees O(log Q) distinct
+        shapes instead of one per merged size."""
         n = lids.size
-        if n == 0:
-            return np.empty(0, dtype=np.int32)
         bucket = max(self.ROUND_BUCKET_MIN, 1 << (n - 1).bit_length())
         if bucket != n:
-            lids = np.pad(lids, (0, bucket - n))
-            xq = np.pad(xq, (0, bucket - n))
-        if algo == "bys":
-            vals = self.next_geq_bys_batch(lids, xq)
-        else:
-            vals = self.next_geq_batch(lids, xq)
-        return np.asarray(vals)[:n]
+            lids = np.pad(lids, (0, bucket - n), mode="edge")
+            xq = np.pad(xq, (0, bucket - n), mode="edge")
+        return np.asarray(super()._dispatch_codec(codec, lids, xq,
+                                                  algo))[:n]
 
-    def next_geq_batch(self, list_ids: np.ndarray,
-                       xs: np.ndarray) -> np.ndarray:
+    def _next_geq_repair(self, list_ids: np.ndarray,
+                         xs: np.ndarray) -> np.ndarray:
         lids = np.asarray(list_ids, np.int32)
         xq = np.asarray(xs, np.int32)
         if self._sharded_next_geq is not None:
             return np.asarray(self._sharded_next_geq(lids, xq))
         return np.asarray(self._next_geq_dev(lids, xq))
 
-    def next_geq_bys_batch(self, list_ids: np.ndarray,
-                           xs: np.ndarray) -> np.ndarray:
+    def _next_geq_repair_bys(self, list_ids: np.ndarray,
+                             xs: np.ndarray) -> np.ndarray:
         """Device binary-search path: bisect the span's phrase-sum prefix
         table, then one grammar descent (``jnp_backend.next_geq_bys_batch``).
         Replicated (never shard_map-dispatched): the prefix table is an
-        index-global auxiliary array."""
+        index-global auxiliary array — the EF and bitmap stores follow
+        the same replication rule (DESIGN.md §10.3)."""
         if self._bys_incl is None:
             self._bys_incl = J.build_bys_table(self.fi)
         return np.asarray(J.next_geq_bys_batch(
             self.fi, self._bys_incl, jnp.asarray(list_ids, jnp.int32),
             jnp.asarray(xs, jnp.int32)))
+
+    # -- codec-tier device paths (DESIGN.md §10.3) ---------------------------
+
+    def _build_ef_pack(self) -> dict:
+        from ..core import ef as EF
+        rank = self.tier.ef.select_samples()
+        return {"samples": rank,
+                "dev": EF.ef_device_pack(self.tier.ef, rank)}
+
+    def _ef_next_geq(self, lids, xq) -> np.ndarray:
+        from ..core import ef as EF
+        return np.asarray(EF.ef_next_geq_jnp(self._ef_pack()["dev"],
+                                             lids, xq))
+
+    def _bm_pack(self):
+        key = (self.index_version, "bm")
+        pack = self._ef_sel.get(key)
+        if pack is None:
+            from ..index import codec_tier as CT
+            pack = CT.bitmap_device_pack(self.tier.bm)
+            self._ef_sel.put(key, pack)
+        return pack
+
+    def _bitmap_next_geq(self, lids, xq) -> np.ndarray:
+        from ..index import codec_tier as CT
+        return np.asarray(CT.bitmap_next_geq_jnp(self._bm_pack(),
+                                                 lids, xq))
+
+    def _probe_tiered(self, long_ids, mat):
+        """(B,) ids × (B, M) probes with per-list codec routing: repair
+        batches keep the backend's 2-D ``_probe_dev`` fast path; with a
+        tier the lanes flatten through ``next_geq_batch`` so EF/bitmap
+        lists probe their own stores (results are identical either way —
+        the repair structures stay ground truth)."""
+        if self.tier is None:
+            return self._probe_dev(long_ids, mat)
+        B, M = np.shape(mat)
+        flat_ids = np.repeat(np.asarray(long_ids, np.int32), M)
+        vals = self.next_geq_batch(flat_ids,
+                                   np.asarray(mat, np.int32).reshape(-1))
+        return np.asarray(vals).reshape(B, M)
 
     #: device expansion cap for whole-list decode; beyond it the host
     #: reference decodes (one-off outliers, same routing idea as
@@ -291,7 +329,8 @@ class DeviceEngine(Engine):
         if dev.size:
             mat = J.expand_batch(self.fi, jnp.asarray(shorts[dev], jnp.int32),
                                  self.max_short_len)
-            vals = self._probe_dev(jnp.asarray(longs[dev], jnp.int32), mat)
+            vals = self._probe_tiered(jnp.asarray(longs[dev], jnp.int32),
+                                      mat)
             kept = np.asarray(J.match_mask(vals, mat))
             for qi, row in zip(dev, kept):
                 out[qi] = self.compact(row)
@@ -317,7 +356,7 @@ class DeviceEngine(Engine):
         cand = J.expand_batch(self.fi, jnp.asarray(order[:1], jnp.int32),
                               self.max_short_len)          # (1, M)
         for i in order[1:]:
-            vals = self._probe_dev(jnp.asarray([i], jnp.int32), cand)
+            vals = self._probe_tiered(jnp.asarray([i], jnp.int32), cand)
             cand = J.match_mask(vals, cand)
         return self.compact(np.asarray(cand[0]))
 

@@ -26,8 +26,9 @@ class HostEngine(Engine):
     name = "host"
 
     def __init__(self, res: RePairResult, method: str = "lookup",
-                 search: str = "exp", k: int = 8, B: int = 8):
-        super().__init__(res)
+                 search: str = "exp", k: int = 8, B: int = 8,
+                 codec=None):
+        super().__init__(res, codec=codec)
         if method not in ("skip", "svs", "lookup"):
             raise ValueError(f"unknown host method {method!r}")
         self.method = method
@@ -62,8 +63,8 @@ class HostEngine(Engine):
 
     # -- point operations ---------------------------------------------------
 
-    def next_geq_batch(self, list_ids: np.ndarray,
-                       xs: np.ndarray) -> np.ndarray:
+    def _next_geq_repair(self, list_ids: np.ndarray,
+                         xs: np.ndarray) -> np.ndarray:
         out = np.empty(len(list_ids), dtype=np.int32)
         for q, (li, x) in enumerate(zip(np.asarray(list_ids),
                                         np.asarray(xs))):

@@ -90,6 +90,22 @@ class PallasEngine(DeviceEngine):
                                 np.asarray(list_ids), np.asarray(xs),
                                 interpret=self.interpret, **self._statics)
 
+    # -- codec-tier device paths (DESIGN.md §10.4) --------------------------
+
+    def _build_ef_pack(self) -> dict:
+        from ..kernels.ef_next_geq import ops as EFK
+        rank = self.tier.ef.select_samples()
+        tables, statics = EFK.pad_ef_operands(self.tier.ef)
+        return {"samples": rank, "kern": (tables, statics)}
+
+    def _ef_next_geq(self, lids, xq) -> np.ndarray:
+        from ..kernels.ef_next_geq import ops as EFK
+        pack = self._ef_pack()
+        tables, statics = pack["kern"]
+        return EFK.next_geq_ef(tables, statics, self.tier.ef,
+                               pack["samples"], np.asarray(lids),
+                               np.asarray(xq), interpret=self.interpret)
+
     def _probe_dev(self, long_ids, xs) -> np.ndarray:
         B, M = np.shape(xs)
         flat_ids = np.repeat(np.asarray(long_ids, np.int32), M)

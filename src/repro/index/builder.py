@@ -62,6 +62,21 @@ class InvertedIndex:
             out[f"{name}_bits"] = float(enc.size_bits())
         return out
 
+    def codec_tier_report(self, mode: str = "adaptive") -> dict:
+        """Space report of a per-list codec tier (DESIGN.md §10) over this
+        index's Re-Pair result: per-codec list counts and bits/posting for
+        ``mode`` in {"repair", "ef", "bitmap", "adaptive"}."""
+        from .codec_tier import build_codec_tier
+
+        tier = build_codec_tier(self.repair, mode)
+        if tier is None:        # "repair" — the tier adds nothing
+            rep = self.space_report()
+            return {"mode": "repair", "total_bits": rep["repair_bits"],
+                    "bits_per_posting": rep["repair_bits_per_posting"],
+                    "counts": {"repair": self.repair.num_lists,
+                               "ef": 0, "bitmap": 0}}
+        return tier.space_report(self.repair)
+
 
 def build_index(
     lists: Sequence[np.ndarray],

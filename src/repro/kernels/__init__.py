@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for the hot spots of the Re-Pair index — six on
+"""Pallas TPU kernels for the hot spots of the Re-Pair index — seven on
 the query side, one on the construction side (each: <name>.py
 pallas_call + BlockSpec, ops.py jit wrapper, ref.py oracle):
 
@@ -23,6 +23,15 @@ pallas_call + BlockSpec, ops.py jit wrapper, ref.py oracle):
                         backs ``PallasEngine.decode_page_batch`` and is
                         checked bit-exactly against the windowed jnp
                         positional descent.
+* ``ef_next_geq``     — the ADAPTIVE CODEC TIER's Elias-Fano probe path
+                        (DESIGN.md §10.4): the host router runs the
+                        high-bits selects (``core.ef.ef_probe_state_np``),
+                        the kernel finishes the low-bits bucket search
+                        over the paged packed-lows array with the same
+                        scalar-prefetch page scheduling as
+                        ``list_intersect``; backs
+                        ``PallasEngine._ef_next_geq`` and is checked
+                        bit-exactly against ``core.ef.ef_next_geq_np``.
 * ``pair_count``      — the CONSTRUCTION path (DESIGN.md §3.3): tiled
                         pair histogram over the working sequence with
                         revisited-block accumulators; backs

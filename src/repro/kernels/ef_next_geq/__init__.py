@@ -1,0 +1,5 @@
+from .ef_next_geq import EF_PAGE, TILE_Q, ef_intersect_pallas
+from .ops import next_geq_ef, pad_ef_operands, route_low_pages
+
+__all__ = ["EF_PAGE", "TILE_Q", "ef_intersect_pallas",
+           "next_geq_ef", "pad_ef_operands", "route_low_pages"]

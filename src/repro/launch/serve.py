@@ -23,7 +23,8 @@ def serve_queries(n_queries: int, engine: str = "jnp",
                   data_shards: int = 0, builder: str = "host",
                   refreshes: int = 0, query: str | None = None,
                   concurrency: int = 0, topk: int = 0,
-                  batch_window: int | None = None) -> None:
+                  batch_window: int | None = None,
+                  codec: str | None = None) -> None:
     from ..build import make_builder
     from ..index import zipf_corpus
     from ..serve.query_serve import QueryServer
@@ -54,7 +55,11 @@ def serve_queries(n_queries: int, engine: str = "jnp",
         mesh = Mesh(_np.array(devs[:data_shards]), ("data",))
         print(f"shard_map dispatch over data axis: {data_shards} device(s)")
     srv = QueryServer(res, max_short_len=256, engine=engine, mesh=mesh,
-                      batch_window=batch_window)
+                      batch_window=batch_window, codec=codec)
+    if srv.engine.tier is not None:
+        rep = srv.engine.tier.space_report(res)
+        print(f"codec tier [{rep['mode']}]: {rep['counts']} "
+              f"({rep['bits_per_posting']:.2f} bits/posting)")
     rng = np.random.default_rng(0)
     pairs = [tuple(map(int, rng.choice(len(lists), 2, replace=False)))
              for _ in range(n_queries)]
@@ -220,12 +225,18 @@ def main() -> None:
     ap.add_argument("--batch-window", type=int, default=None,
                     help="scheduler in-flight window (default: "
                          "--concurrency, or REPRO_BATCH_WINDOW)")
+    ap.add_argument("--codec", default=None,
+                    choices=("repair", "ef", "bitmap", "adaptive"),
+                    help="per-list codec tier (DESIGN.md §10): force one "
+                         "codec or 'adaptive' cost-model selection "
+                         "(default: repair, or REPRO_CODEC)")
     args = ap.parse_args()
     if args.tier == "queries":
         serve_queries(args.n, args.engine, data_shards=args.data_shards,
                       builder=args.builder, refreshes=args.refresh,
                       query=args.query, concurrency=args.concurrency,
-                      topk=args.topk, batch_window=args.batch_window)
+                      topk=args.topk, batch_window=args.batch_window,
+                      codec=args.codec)
     else:
         serve_lm(args.arch, args.n)
 

@@ -60,18 +60,26 @@ class ListStats:
     depth: int                 # max grammar descent depth
     B: int                     # (b)-sampling parameter (expected bucket scan)
     domain: int                # number of addressable documents
+    #: (L,) per-list codec ids from the engine's adaptive tier
+    #: (DESIGN.md §10) — None means all-repair.  Probe pricing only: the
+    #: engine answers a probe on an EF/bitmap list from that codec's own
+    #: store regardless of the svs/bys label, so the cost model charges
+    #: the codec's per-probe constant instead of the repair scan+descent.
+    codecs: np.ndarray | None = None
 
     @classmethod
     def from_engine(cls, engine, B: int = 8,
                     domain: int | None = None) -> "ListStats":
         res = engine.res
         starts = np.asarray(res.starts, np.int64)
+        tier = getattr(engine, "tier", None)
         return cls(lengths=np.asarray(res.orig_lengths, np.int64),
                    clens=np.diff(starts),
                    depth=max(1, int(res.grammar.max_depth())),
                    B=B,
                    domain=int(domain if domain is not None
-                              else res.universe))
+                              else res.universe),
+                   codecs=None if tier is None else tier.codec)
 
     def valid(self, t: int) -> bool:
         return 0 <= t < self.lengths.size
@@ -81,6 +89,11 @@ class ListStats:
 
     def m(self, t: int) -> float:
         return float(self.clens[t]) if self.valid(t) else 0.0
+
+    def codec_of(self, t: int) -> int:
+        if self.codecs is None or not self.valid(t):
+            return 0
+        return int(self.codecs[t])
 
 
 @dataclasses.dataclass
@@ -123,11 +136,34 @@ def _step_cost(stats: ListStats, cand: float, child: "PlanNode",
         return "merge", cand + child.est_cost + child.est_n
     t = child.node.t
     n, m = stats.n(t), stats.m(t)
-    costs = {
-        "merge": cand + n,
-        "svs": cand * (stats.B + d),
-        "bys": cand * (math.log2(max(2.0, m)) + d),
-    }
+    codec = stats.codec_of(t)
+    if codec:
+        from ..index.codec_tier import (T_BITMAP, T_BITMAP_SETUP, T_EF,
+                                        T_EF_SETUP)
+        # EF probe = select-sample bisect + SEL_PAGE scan + in-bucket
+        # low-bits bisect: logarithmic in n with a constant (T_EF) on
+        # top, plus a large per-ROUND setup charge (the fixed-trip select
+        # machinery runs whatever the lane count) — so probing only beats
+        # decode-and-merge on lists long enough to amortize the selects.
+        # Bitmap membership is one word test with a small setup.
+        if codec == 1:
+            per_probe, setup = math.log2(max(2.0, n)) + T_EF, T_EF_SETUP
+        else:
+            per_probe, setup = float(T_BITMAP), T_BITMAP_SETUP
+        costs = {
+            "merge": cand + n,
+            # svs and bys dispatch identically on a non-repair list (the
+            # engine's codec router answers both from the same store), so
+            # they price the same — the merge-vs-probe choice stays live
+            "svs": cand * per_probe + setup,
+            "bys": cand * per_probe + setup,
+        }
+    else:
+        costs = {
+            "merge": cand + n,
+            "svs": cand * (stats.B + d),
+            "bys": cand * (math.log2(max(2.0, m)) + d),
+        }
     if force in costs:
         return force, costs[force]
     algo = min(costs, key=lambda k: (costs[k], k))
@@ -208,6 +244,14 @@ def make_plan(node: Node, stats: ListStats,
         if all_terms and len(kids) >= 3 and op == "and" and probe_terms:
             n_min = min(k.est_n for k in kids)
             meld_cost = len(kids) * n_min * (1.0 + stats.depth)
+            # frontier chasing on a non-repair list pays the codec's
+            # per-round setup on every alternation (~2*n_min rounds) —
+            # the same charge _step_cost levies once per probe step
+            kid_codecs = {stats.codec_of(k.node.t) for k in kids}
+            if kid_codecs != {0}:
+                from ..index.codec_tier import T_BITMAP_SETUP, T_EF_SETUP
+                setup = (T_EF_SETUP if 1 in kid_codecs else T_BITMAP_SETUP)
+                meld_cost += 2.0 * n_min * setup
             if force_algo == "meld" or (force_algo is None
                                         and meld_cost < cost):
                 # frontier chasing: one round per alternation, bounded by

@@ -70,15 +70,20 @@ class QueryServer:
                  interpret: bool | None = None,
                  page_size: int = DEFAULT_PAGE, paged: bool = False,
                  mesh: Mesh | None = None,
-                 batch_window: int | None = None):
+                 batch_window: int | None = None,
+                 codec: str | None = None):
         self._B = B
         self.max_short_len = max_short_len
         # engine construction parameters, kept so rebuild() can stand up
-        # an identical engine over a fresh index
+        # an identical engine over a fresh index.  ``codec`` selects the
+        # per-list codec tier (DESIGN.md §10): "repair" (default),
+        # "ef"/"bitmap" (forced), "adaptive", or None to honor the
+        # REPRO_CODEC env override; the rebuilt engine re-runs codec
+        # selection over the fresh index.
         self._engine_name = engine
-        kwargs: dict = {}
+        kwargs: dict = {"codec": codec}
         if engine in ("jnp", "pallas"):
-            kwargs = dict(max_short_len=max_short_len, B=B, mesh=mesh,
+            kwargs.update(max_short_len=max_short_len, B=B, mesh=mesh,
                           page_size=page_size)
             if engine == "pallas":
                 kwargs["interpret"] = interpret

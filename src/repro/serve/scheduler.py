@@ -14,7 +14,11 @@ serving rates.  The scheduler amortizes it the way production engines do
   ``DecodeList``) until it blocks on a :class:`ProbeRound`, concatenates
   the pending rounds of ALL blocked queries into one
   ``engine.dispatch_round`` per (engine, algorithm), and scatters each
-  query's slice of the answers back into its continuation;
+  query's slice of the answers back into its continuation.  With an
+  adaptive codec tier (DESIGN.md §10.3) the engine splits that merged
+  round by per-list codec, so the effective coalescing key at the device
+  boundary is (engine, codec, algorithm) — still one device dispatch per
+  codec present per tick, counted in ``stats()["codec_dispatches"]``;
 * queries complete **out of order** — a bare-term query admitted last
   finishes on its first advance while a 4-term meld keeps ticking.
 
@@ -418,6 +422,12 @@ class QueryScheduler:
             "threshold_final": float(self.threshold_final),
             "coalescing_factor": (float(np.mean(widths))
                                   if widths else 0.0),
+            # per-codec device dispatch counts (DESIGN.md §10.3): a merged
+            # (engine, algo) tick round splits inside the engine into one
+            # device dispatch per codec present — the effective coalescing
+            # key at the device boundary is (engine, codec, algo)
+            "codec_dispatches": dict(
+                getattr(self._engine, "codec_dispatches", {})),
             "decode_cache": self.decode_cache.stats(),
             "result_cache": self.result_cache.stats(),
         }

@@ -1,0 +1,315 @@
+"""Adaptive codec tier (DESIGN.md §10): Elias-Fano + bitmap stores, the
+per-list selection cost model, and the per-codec round dispatch seam.
+
+Three layers of gates:
+
+* **store parity** — EF round-trip (plain + hypothesis), and
+  ``next_geq`` parity of the numpy / jnp / pallas implementations against
+  a decoded-bisection oracle on the adversarial corpus; same for the
+  bitmap store;
+* **selection** — forced modes, the ``REPRO_CODEC`` env override, and the
+  Pareto guard (an adaptive tier never spends more bits than all-repair);
+* **engine seam** — every engine × codec mode answers probe rounds
+  bit-identically (repair structures stay ground truth), the bitmap
+  membership fast path included, and the EF select-sample cache is a
+  bounded LRU keyed on the index version, flushed by
+  ``QueryServer.swap_index`` (mirrors the decode-cache contract of
+  DESIGN.md §8.3).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from strategies import HAVE_HYPOTHESIS, adversarial_lists
+
+from repro.core import ef as EF
+from repro.core.jax_index import INT_INF
+from repro.core.repair import repair_compress
+from repro.engine import HostEngine, JnpEngine, PallasEngine
+from repro.index import codec_tier as CT
+
+SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
+UNIVERSE = 900
+
+
+@pytest.fixture(scope="module")
+def clists():
+    return adversarial_lists(np.random.default_rng(SEED + 7),
+                             universe=UNIVERSE, n_random=10, max_len=80)
+
+
+@pytest.fixture(scope="module")
+def cres(clists):
+    return repair_compress(clists)
+
+
+@pytest.fixture(scope="module")
+def ef_store(clists):
+    # every other list absent: the store must handle directory gaps
+    sel = [v if i % 2 == 0 else None for i, v in enumerate(clists)]
+    return EF.build_ef_store(sel, UNIVERSE), sel
+
+
+def _probes(lists, universe):
+    """(lids, xs) hitting every boundary: members, members ± 1, 0, last,
+    past-the-end."""
+    ls, xs = [], []
+    for i, v in enumerate(lists):
+        if v is None:
+            v = np.zeros(0, np.int64)
+        p = np.unique(np.concatenate(
+            [v, v - 1, v + 1, [0, universe // 2, universe - 1,
+                               universe + 5]]))
+        p = p[p >= 0]
+        ls.append(np.full(p.size, i))
+        xs.append(p)
+    return (np.concatenate(ls).astype(np.int32),
+            np.concatenate(xs).astype(np.int32))
+
+
+def _oracle(lists, lids, xs):
+    out = np.full(lids.size, INT_INF, np.int64)
+    for q, (li, x) in enumerate(zip(lids, xs)):
+        v = lists[li]
+        if v is None or len(v) == 0:
+            continue
+        j = int(np.searchsorted(v, x))
+        if j < len(v):
+            out[q] = v[j]
+    return out.astype(np.int32)
+
+
+# -- EF store ----------------------------------------------------------------
+
+def test_ef_round_trip(clists, ef_store):
+    store, sel = ef_store
+    for i, v in enumerate(sel):
+        got = store.decode(i)
+        want = np.zeros(0, np.int64) if v is None else np.asarray(v)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_ef_next_geq_np_vs_oracle(ef_store):
+    store, sel = ef_store
+    rank = store.select_samples()
+    lids, xs = _probes(sel, UNIVERSE)
+    got = EF.ef_next_geq_np(store, rank, lids, xs)
+    np.testing.assert_array_equal(got, _oracle(sel, lids, xs))
+
+
+def test_ef_next_geq_jnp_parity(ef_store):
+    store, sel = ef_store
+    rank = store.select_samples()
+    lids, xs = _probes(sel, UNIVERSE)
+    want = EF.ef_next_geq_np(store, rank, lids, xs)
+    pack = EF.ef_device_pack(store, rank)
+    got = np.asarray(EF.ef_next_geq_jnp(pack, lids, xs))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ef_next_geq_pallas_parity(ef_store):
+    from repro.kernels.ef_next_geq import ops as EFK
+    store, sel = ef_store
+    rank = store.select_samples()
+    tables, statics = EFK.pad_ef_operands(store)
+    lids, xs = _probes(sel, UNIVERSE)
+    want = EF.ef_next_geq_np(store, rank, lids, xs)
+    got = EFK.next_geq_ef(tables, statics, store, rank, lids, xs,
+                          interpret=True)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ef_size_accounting(ef_store):
+    store, sel = ef_store
+    bits = store.size_bits()
+    assert bits["total_bits"] == (bits["data_bits"] + bits["sample_bits"]
+                                  + bits["directory_bits"])
+    n_post = sum(len(v) for v in sel if v is not None)
+    # quasi-succinct: the data bits stay within a small factor of the
+    # information-theoretic 2 + log2(u/n) per posting on this corpus
+    assert bits["data_bits"] < 40 * n_post
+
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.data())
+    def test_ef_hypothesis_round_trip_and_next_geq(data):
+        u = data.draw(st.integers(4, 2000), label="universe")
+        n = data.draw(st.integers(1, min(u, 150)), label="n")
+        ids = data.draw(st.sets(st.integers(0, u - 1),
+                                min_size=n, max_size=n), label="ids")
+        v = np.asarray(sorted(ids), np.int64)
+        store = EF.build_ef_store([v], u)
+        np.testing.assert_array_equal(store.decode(0), v)
+        rank = store.select_samples()
+        xs = np.unique(np.concatenate([v, v - 1, v + 1, [0, u - 1, u]]))
+        xs = xs[xs >= 0].astype(np.int32)
+        lids = np.zeros(xs.size, np.int32)
+        got = EF.ef_next_geq_np(store, rank, lids, xs)
+        np.testing.assert_array_equal(got, _oracle([v], lids, xs))
+
+
+# -- bitmap store ------------------------------------------------------------
+
+def test_bitmap_parity(clists):
+    bs = CT.build_bitmap_store(clists, UNIVERSE)
+    lids, xs = _probes(clists, UNIVERSE)
+    want = _oracle(clists, lids, xs)
+    np.testing.assert_array_equal(CT.bitmap_next_geq_np(bs, lids, xs),
+                                  want)
+    pack = CT.bitmap_device_pack(bs)
+    np.testing.assert_array_equal(
+        np.asarray(CT.bitmap_next_geq_jnp(pack, lids, xs)), want)
+    member = CT.bitmap_member_np(bs, lids, xs)
+    np.testing.assert_array_equal(member, want == xs)
+    for i, v in enumerate(clists):
+        np.testing.assert_array_equal(bs.decode(i), v)
+
+
+# -- selection ---------------------------------------------------------------
+
+def test_codec_mode_env_and_override(monkeypatch):
+    assert CT.codec_mode("ef") == "ef"
+    monkeypatch.setenv("REPRO_CODEC", "bitmap")
+    assert CT.codec_mode(None) == "bitmap"
+    assert CT.codec_mode("adaptive") == "adaptive"   # arg beats env
+    monkeypatch.delenv("REPRO_CODEC")
+    assert CT.codec_mode(None) == "repair"
+    monkeypatch.setenv("REPRO_CODEC", "bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        CT.codec_mode(None)
+
+
+def test_forced_modes_assign_every_list(cres, monkeypatch):
+    monkeypatch.delenv("REPRO_CODEC", raising=False)
+    L = cres.num_lists
+    for mode, cid in (("ef", CT.CODEC_EF), ("bitmap", CT.CODEC_BITMAP)):
+        tier = CT.build_codec_tier(cres, mode)
+        nonempty = np.asarray(
+            [cres.orig_lengths[i] > 0 for i in range(L)])
+        assert np.all(tier.codec[nonempty] == cid)
+    assert CT.build_codec_tier(cres, "repair") is None
+    assert CT.build_codec_tier(cres, None) is None   # default mode
+
+
+def test_adaptive_pareto_guard(cres):
+    """Adaptive never spends more bits than all-repair: every list whose
+    chosen codec would inflate its bits estimate is forced back."""
+    tier = CT.build_codec_tier(cres, "adaptive")
+    lasts = np.asarray([cres.decode_list(i)[-1]
+                        if cres.orig_lengths[i] else -1
+                        for i in range(cres.num_lists)])
+    bits = CT.estimate_codec_bits(cres, lasts)
+    chosen = bits[np.arange(cres.num_lists), tier.codec]
+    assert np.all(chosen <= bits[:, CT.CODEC_REPAIR])
+    rep = tier.space_report(cres)
+    rep0 = CT.build_codec_tier(cres, "ef").space_report(cres)
+    assert set(rep["counts"]) == {"repair", "ef", "bitmap"}
+    assert rep["total_bits"] > 0 and rep0["total_bits"] > 0
+
+
+# -- engine seam -------------------------------------------------------------
+
+MODES = (None, "repair", "ef", "bitmap", "adaptive")
+
+
+def _engines(res, codec):
+    return {
+        "host": HostEngine(res, codec=codec),
+        "jnp": JnpEngine(res, max_short_len=64, codec=codec),
+        "jnp_paged": JnpEngine(res, max_short_len=64, paged=True,
+                               page_size=128, codec=codec),
+        "pallas": PallasEngine(res, max_short_len=64, interpret=True,
+                               codec=codec),
+    }
+
+
+def test_engines_bit_identical_across_codecs(clists, cres):
+    lids, xs = _probes(clists, UNIVERSE)
+    keep = lids < cres.num_lists
+    lids, xs = lids[keep], xs[keep]
+    want = _oracle(clists, lids, xs)
+    for codec in MODES:
+        for name, eng in _engines(cres, codec).items():
+            for algo in ("svs", "bys"):
+                got = eng.dispatch_round(lids, xs, algo)
+                np.testing.assert_array_equal(
+                    got, want, err_msg=f"{name}/{codec}/{algo}")
+            member = eng.member_batch(lids, xs)
+            np.testing.assert_array_equal(
+                member, want == xs, err_msg=f"{name}/{codec}/member")
+            if codec in ("adaptive", "ef", "bitmap"):
+                assert sum(eng.codec_dispatches.values()) > 0
+
+
+def test_intersections_bit_identical_across_codecs(clists, cres):
+    pairs = [(0, 1), (2, 3), (10, 11), (12, 13)]
+    want_pairs = [np.intersect1d(clists[a], clists[b]) for a, b in pairs]
+    want_multi = np.intersect1d(np.intersect1d(clists[0], clists[1]),
+                                clists[2])
+    for codec in MODES:
+        for name, eng in _engines(cres, codec).items():
+            for (a, b), w in zip(pairs, eng.intersect_pairs(pairs)):
+                np.testing.assert_array_equal(
+                    w, want_pairs[pairs.index((a, b))],
+                    err_msg=f"{name}/{codec}/pair {a},{b}")
+            np.testing.assert_array_equal(
+                eng.intersect_multi([0, 1, 2]), want_multi,
+                err_msg=f"{name}/{codec}/multi")
+
+
+def test_planner_prices_codec_probes(cres, monkeypatch):
+    monkeypatch.delenv("REPRO_CODEC", raising=False)
+    from repro.query import ListStats
+    eng = JnpEngine(cres, max_short_len=64, codec="adaptive")
+    stats = ListStats.from_engine(eng)
+    assert stats.codecs is not None
+    # repair engine carries no codec column
+    stats0 = ListStats.from_engine(JnpEngine(cres, max_short_len=64))
+    assert stats0.codecs is None and stats0.codec_of(0) == 0
+
+
+# -- the select-sample cache (DESIGN.md §10.2 / §8.3) ------------------------
+
+def test_ef_cache_lru_bound_and_version_key(cres):
+    eng = HostEngine(cres, codec="ef")
+    eng._ef_sel.maxsize = 2         # shrink the bound for the test
+    lids = np.zeros(4, np.int32)
+    xs = np.arange(4, dtype=np.int32)
+    eng.dispatch_round(lids, xs, "svs")
+    assert (eng.index_version, "ef") in eng._ef_sel
+    # a version bump (what swap_index does) keys a fresh entry; the
+    # bounded LRU retires older versions rather than growing
+    for v in (1, 2, 3):
+        eng.index_version = v
+        eng.dispatch_round(lids, xs, "svs")
+        assert (v, "ef") in eng._ef_sel
+        assert len(eng._ef_sel) <= 2
+    assert (0, "ef") not in eng._ef_sel
+
+
+def test_ef_cache_flushed_on_swap(clists, cres):
+    from repro.query import naive_eval, Term
+    from repro.serve.query_serve import QueryServer
+
+    srv = QueryServer(cres, engine="jnp", codec="adaptive")
+    before = srv.search("0")
+    if srv.engine.tier.ef is not None:
+        srv.engine.next_geq_batch(np.zeros(4, np.int32),
+                                  np.arange(4, dtype=np.int32))
+    new_lists = [np.unique(l // 2) for l in clists]
+    new_res = repair_compress(new_lists)
+    srv.swap_index(new_res)
+    # fresh engine at the bumped version with an empty select-sample
+    # cache; codec selection re-ran over the new index
+    assert srv.engine.index_version == srv.version
+    assert len(srv.engine._ef_sel) == 0
+    assert srv.engine.tier is not None
+    np.testing.assert_array_equal(
+        srv.search("0"), naive_eval(Term(0), new_lists, new_res.universe))
+    np.testing.assert_array_equal(before, clists[0])

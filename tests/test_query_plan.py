@@ -181,6 +181,32 @@ def test_page_straddling_phrase_windows(page_size):
                           stride=stride).size > 0
 
 
+@pytest.mark.parametrize("codec", ["adaptive", "ef", "bitmap"])
+def test_differential_mixed_codecs(qlists, qres, codec):
+    """Adaptive codec tier (DESIGN.md §10): every codec assignment must
+    evaluate bit-identically to the all-repair engines and the oracle —
+    host, jnp paged (REPRO_PAGE_SIZE-style 128 layout), pallas, and the
+    1-device-mesh shard_map path (repair probes sharded, EF/bitmap
+    probes replicated)."""
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    engines = [
+        HostEngine(qres, codec=codec),
+        JnpEngine(qres, max_short_len=64, paged=True, page_size=128,
+                  codec=codec),
+        PallasEngine(qres, max_short_len=64, interpret=True, codec=codec),
+        JnpEngine(qres, max_short_len=64, mesh=mesh, codec=codec),
+    ]
+    rng = np.random.default_rng(SEED + 5)
+    nodes = [random_ast(rng, len(qlists)) for _ in range(8)]
+    for eng in engines:
+        for node in nodes:
+            _check(eng, qlists, qres.universe, node)
+        _check(eng, qlists, qres.universe, nodes[0], "svs")
+        _check(eng, qlists, qres.universe, nodes[0], "bys")
+
+
 def test_sharded_dispatch_path(qlists, qres):
     """The executor's svs probes ride the shard_map dispatch when the
     engine carries a mesh (single-device mesh: same math, sharded code)."""
