@@ -30,6 +30,7 @@ BENCHES = {
     "fig4": "benchmarks.bench_tradeoff",     # legacy alias for tradeoff
     "hybrid": "benchmarks.bench_bitmap_hybrid",
     "optimize": "benchmarks.bench_optimize",
+    "outofcore": "benchmarks.bench_outofcore",
     "roofline": "benchmarks.roofline",
 }
 

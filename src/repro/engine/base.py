@@ -69,9 +69,30 @@ class Engine(abc.ABC):
     index_version: int = 0
 
     def __init__(self, res: RePairResult,
-                 codec: "str | object | None" = None):
+                 codec: "str | object | None" = None,
+                 store: "str | object | None" = None,
+                 resident_pages: int | None = None,
+                 resident=None):
         self.res = res
         self.lengths = np.asarray(res.orig_lengths, dtype=np.int64)
+        # out-of-core tier (DESIGN.md §11): ``store`` picks the page-store
+        # backend (None defers to REPRO_STORE; ""/none disables), and
+        # ``resident_pages`` bounds the admission cache (None defers to
+        # REPRO_RESIDENT_PAGES).  A prebuilt ``resident`` shares another
+        # engine's pool (the device engines hand theirs to the host
+        # fallback so both tiers hit one cache).  Construction is deferred
+        # to ``_init_store`` — concrete engines call it once their paged
+        # geometry exists.
+        from ..store import resolve_store_kind
+        self.store = None
+        self.resident = None
+        self._resident_pages = resident_pages
+        if resident is not None:
+            self.resident = resident
+            self.store = resident.store
+            self._store_kind = None
+        else:
+            self._store_kind = resolve_store_kind(store)
         self._decoded = LRUCache(DECODE_CACHE_SIZE)
         self._score_index: ScoreIndex | None = None
         #: optional override of the score-directory page granularity —
@@ -157,6 +178,70 @@ class Engine(abc.ABC):
             out[m] = np.where(hit, arr[np.minimum(pos, arr.size - 1)],
                               int(INT_INF))
         return out.astype(np.int32)
+
+    # -- out-of-core storage (DESIGN.md §11) ---------------------------------
+
+    def _init_store(self, pi=None, page_size: int | None = None) -> None:
+        """Materialize the requested page store + admission cache.  Called
+        once by each concrete engine after its paged geometry exists;
+        ``pi`` (a PagedIndex with real stream arrays) makes the store a
+        zero-recompute snapshot of the exact pages the engine serves."""
+        if self.resident is not None or self._store_kind is None:
+            return
+        from ..store import PageStore, ResidentSet, build_page_store
+        kind = self._store_kind
+        if isinstance(kind, PageStore):
+            store = kind
+        else:
+            store = build_page_store(self.res, kind=kind,
+                                     page_size=page_size, pi=pi)
+        self.store = store
+        self.resident = ResidentSet(store, budget=self._resident_pages)
+
+    def prefault(self, probes=(), score_entries=None) -> None:
+        """Fault the union page working set of one tick's merged rounds in
+        a single batched gather (DESIGN.md §11.3).  ``probes`` is an
+        iterable of ``(list_ids, xs)`` rounds; ``score_entries`` the
+        tick's merged ScoreRound lanes.  No-op without a store — and
+        purely an optimization with one: every dispatch path re-ensures
+        its own working set, prefaulting just coalesces the tick's misses
+        into one ``store.gather``."""
+        if self.resident is None:
+            return
+        groups = []
+        for lids, xq in probes:
+            lids = np.asarray(lids, np.int64).ravel()
+            xq = np.asarray(xq, np.int64).ravel()
+            if self.tier is not None and lids.size:
+                m = self.tier.codec[lids] == 0   # only Re-Pair lanes
+                lids, xq = lids[m], xq[m]        # touch the stream pool
+            if lids.size:
+                groups.append(self._probe_pages(lids, xq))
+        if score_entries is not None:
+            e = np.asarray(score_entries, np.int64).ravel()
+            if e.size:
+                groups.append(self._score_pages(e))
+        groups = [g for g in groups if g.size]
+        if groups:
+            self.resident.ensure(np.concatenate(groups))
+
+    def _probe_pages(self, lids: np.ndarray, xq: np.ndarray) -> np.ndarray:
+        """Pages one merged probe round can touch.  Host granularity is
+        the full list span (the accessors materialize spans — the paper's
+        contiguous-block unit); device engines override with the router's
+        per-lane skip windows."""
+        from ..store import pages_in_spans
+        starts = self.store.meta["starts"]
+        u = np.unique(lids)
+        return pages_in_spans(starts[u], starts[u + 1],
+                              self.store.page_size)
+
+    def _score_pages(self, entries: np.ndarray) -> np.ndarray:
+        """Pages one merged ScoreRound decode can touch."""
+        from ..store import pages_in_spans
+        si = self.score_index
+        return pages_in_spans(si.pg_sym_lo[entries], si.pg_sym_hi[entries],
+                              self.store.page_size)
 
     # -- merged probe rounds -------------------------------------------------
 

@@ -26,6 +26,7 @@ emit -1).
 from __future__ import annotations
 
 import abc
+import dataclasses
 import functools
 from typing import Sequence
 
@@ -36,10 +37,12 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from ..core.jax_index import (FlatIndex, PagedIndex, build_flat_index,
-                              build_paged_index, DEFAULT_PAGE)
+from ..core.jax_index import (FlatIndex, PagedIndex, as_store_backed,
+                              build_flat_index, build_paged_index,
+                              DEFAULT_PAGE)
 from ..core.repair import RePairResult
 from ..distributed.sharding import index_partition_spec
+from ..kernels.list_intersect import ops as K
 from .base import Engine
 from .host import HostEngine
 from . import jnp_backend as J
@@ -174,8 +177,10 @@ class DeviceEngine(Engine):
                  max_short_len: int = 256, B: int = 8,
                  fallback: Engine | None = None,
                  mesh: Mesh | None = None, mesh_axis: str = "data",
-                 codec=None):
-        super().__init__(res, codec=codec)
+                 codec=None, store=None, resident_pages=None,
+                 resident=None):
+        super().__init__(res, codec=codec, store=store,
+                         resident_pages=resident_pages, resident=resident)
         self.fi = fi if fi is not None else build_flat_index(res, B=B)
         self.max_short_len = max_short_len
         self._B = B
@@ -183,19 +188,77 @@ class DeviceEngine(Engine):
         self.mesh = mesh
         self._sharded_next_geq = None
         self._bys_incl = None   # [BY04] prefix table, built on first bys
+        self._route_host = None  # routing snapshot, set by _attach_store
+        self._starts_np = None
         if mesh is not None and mesh_axis in mesh.axis_names:
             self._sharded_next_geq = make_sharded_next_geq(
                 self.fi, mesh, mesh_axis)
+
+    # -- out-of-core store attach (DESIGN.md §11) ---------------------------
+
+    def _wants_store(self) -> bool:
+        return self.resident is not None or self._store_kind is not None
+
+    def _attach_store(self, pi: PagedIndex) -> PagedIndex:
+        """Swap a just-built paged index onto the admission cache: build
+        (or adopt) the PageStore from the index's own paged arrays, replace
+        the stream leaves with placeholders (``as_store_backed``) so the
+        device never holds the full stream, and snapshot the host routing
+        tables — the directories/buckets/grammar the paper keeps in RAM.
+        Returns ``pi`` unchanged when no store was requested."""
+        if not self._wants_store():
+            return pi
+        if self.resident is None:
+            from ..store import (PageStore, ResidentSet, build_page_store)
+            if pi.store is not None:
+                self.store = pi.store
+            elif isinstance(self._store_kind, PageStore):
+                self.store = self._store_kind
+            else:
+                self.store = build_page_store(self.res,
+                                              kind=self._store_kind, pi=pi)
+            self.resident = ResidentSet(self.store,
+                                        budget=self._resident_pages)
+        else:
+            self.store = self.resident.store
+        if int(self.store.page_size) != int(pi.page_size):
+            raise ValueError(
+                "page store geometry mismatch: store page_size "
+                f"{self.store.page_size} != index {pi.page_size}")
+        # drop the O(N) flat stream as well: paged placeholders via
+        # as_store_backed, and the flat mirror's ``c`` shrinks to one
+        # element — every resident dispatch path reads the pool, and the
+        # store gate poisons these arrays to prove nothing else does
+        slim = dataclasses.replace(self.fi, c=jnp.zeros(1, jnp.int32))
+        self.fi = slim
+        pi = as_store_backed(dataclasses.replace(pi, flat=slim), self.store)
+        self._route_host = K.routing_snapshot(pi)
+        self._starts_np = np.asarray(self.store.meta["starts"], np.int64)
+        return pi
+
+    def _pool(self):
+        """The resident pool's device mirror (syms, sums, slot table)."""
+        return self.resident.device_tables()
+
+    def _probe_pages(self, lids: np.ndarray, xq: np.ndarray) -> np.ndarray:
+        """Working set of a probe round = exactly the pages the router
+        would window (shared ``_probe_windows`` math), so a prefault batch
+        faults nothing a dispatch wouldn't."""
+        if self._sharded_next_geq is not None or self._route_host is None:
+            return np.zeros(0, np.int64)   # sharding is its own residency
+        return K.probe_working_set(self._route_host, lids, xq)
 
     @property
     def fallback(self) -> Engine:
         """Host fallback, built lazily on the first outlier route — its
         (b)-sampling duplicates the one inside build_flat_index, so paying
         for it only when a query actually needs it keeps engine
-        construction to one sampling pass."""
+        construction to one sampling pass.  Under a store it shares this
+        engine's ResidentSet, so outlier routes hit the same bounded pool
+        (one admission cache per index version)."""
         if self._fallback is None:
             self._fallback = HostEngine(self.res, method="lookup",
-                                        B=self._B)
+                                        B=self._B, resident=self.resident)
         return self._fallback
 
     # -- the one backend-specific primitive --------------------------------
@@ -242,7 +305,21 @@ class DeviceEngine(Engine):
         xq = np.asarray(xs, np.int32)
         if self._sharded_next_geq is not None:
             return np.asarray(self._sharded_next_geq(lids, xq))
+        if self.resident is not None:
+            return np.asarray(self._next_geq_resident(lids, xq))
         return np.asarray(self._next_geq_dev(lids, xq))
+
+    def _next_geq_resident(self, lids: np.ndarray,
+                           xq: np.ndarray) -> np.ndarray:
+        """Resident-pool probe: fault the round's working set (a no-op
+        when the scheduler already prefaulted it), then run the
+        slot-indexed paged mirror against the bounded pool."""
+        self.resident.ensure(K.probe_working_set(self._route_host,
+                                                 lids, xq))
+        ps, pu, st = self._pool()
+        return J.next_geq_batch_resident(
+            self.pi, ps, pu, st, jnp.asarray(lids, jnp.int32),
+            jnp.asarray(xq, jnp.int32))
 
     def _next_geq_repair_bys(self, list_ids: np.ndarray,
                              xs: np.ndarray) -> np.ndarray:
@@ -250,7 +327,12 @@ class DeviceEngine(Engine):
         table, then one grammar descent (``jnp_backend.next_geq_bys_batch``).
         Replicated (never shard_map-dispatched): the prefix table is an
         index-global auxiliary array — the EF and bitmap stores follow
-        the same replication rule (DESIGN.md §10.3)."""
+        the same replication rule (DESIGN.md §10.3).  Out of core it
+        delegates to the resident probe path: the [BY04] prefix table is
+        another O(N) full-stream array, which is exactly what the bounded
+        pool exists to avoid, and the next_geq contract is identical."""
+        if self.resident is not None:
+            return self._next_geq_repair(list_ids, xs)
         if self._bys_incl is None:
             self._bys_incl = J.build_bys_table(self.fi)
         return np.asarray(J.next_geq_bys_batch(
@@ -289,8 +371,10 @@ class DeviceEngine(Engine):
         batches keep the backend's 2-D ``_probe_dev`` fast path; with a
         tier the lanes flatten through ``next_geq_batch`` so EF/bitmap
         lists probe their own stores (results are identical either way —
-        the repair structures stay ground truth)."""
-        if self.tier is None:
+        the repair structures stay ground truth).  The resident path
+        flattens too: the probe rounds reuse the one slot-indexed
+        program instead of growing a second 2-D resident mirror."""
+        if self.tier is None and self.resident is None:
             return self._probe_dev(long_ids, mat)
         B, M = np.shape(mat)
         flat_ids = np.repeat(np.asarray(long_ids, np.int32), M)
@@ -303,6 +387,24 @@ class DeviceEngine(Engine):
     #: ``max_short_len``)
     _DECODE_CAP = 8192
 
+    def _expand(self, ids, max_len: int) -> jax.Array:
+        """Batched list expansion, routed through the resident pool when a
+        store is attached.  ``max_len`` bounds the symbol window read per
+        list, so only pages covering ``[starts[i], starts[i] + max_len)``
+        (clipped to the span) are faulted."""
+        if self.resident is None:
+            return J.expand_batch(self.fi, jnp.asarray(ids, jnp.int32),
+                                  max_len)
+        from ..store import pages_in_spans
+        idx = np.asarray(ids, np.int64).ravel()
+        lo = self._starts_np[idx]
+        hi = np.minimum(self._starts_np[idx + 1], lo + max_len)
+        self.resident.ensure(pages_in_spans(lo, hi,
+                                            int(self.pi.page_size)))
+        ps, pu, st = self._pool()
+        return J.expand_batch_resident(self.pi, ps, pu, st,
+                                       jnp.asarray(idx, jnp.int32), max_len)
+
     def _decode_list(self, i: int) -> np.ndarray:
         """Whole-list decode via the device positional-descent expansion.
         The static ``max_len`` is the length rounded up to a power of two,
@@ -311,7 +413,7 @@ class DeviceEngine(Engine):
         if n > self._DECODE_CAP:
             return super()._decode_list(i)
         bucket = max(16, 1 << (max(1, n - 1)).bit_length())
-        row = J.expand_batch(self.fi, jnp.asarray([i], jnp.int32), bucket)
+        row = self._expand([i], bucket)
         return self.compact(np.asarray(row[0]))
 
     def intersect_pairs(self, pairs: Sequence[tuple[int, int]]
@@ -327,8 +429,7 @@ class DeviceEngine(Engine):
         out: list[np.ndarray | None] = [None] * arr.shape[0]
         dev = np.flatnonzero(~to_host)
         if dev.size:
-            mat = J.expand_batch(self.fi, jnp.asarray(shorts[dev], jnp.int32),
-                                 self.max_short_len)
+            mat = self._expand(shorts[dev], self.max_short_len)
             vals = self._probe_tiered(jnp.asarray(longs[dev], jnp.int32),
                                       mat)
             kept = np.asarray(J.match_mask(vals, mat))
@@ -353,8 +454,7 @@ class DeviceEngine(Engine):
             return np.empty(0, dtype=np.int64)
         if self.lengths[order[0]] > self.max_short_len:
             return self.fallback.intersect_multi(idxs)
-        cand = J.expand_batch(self.fi, jnp.asarray(order[:1], jnp.int32),
-                              self.max_short_len)          # (1, M)
+        cand = self._expand(order[:1], self.max_short_len)  # (1, M)
         for i in order[1:]:
             vals = self._probe_tiered(jnp.asarray([i], jnp.int32), cand)
             cand = J.match_mask(vals, cand)
@@ -400,6 +500,21 @@ class DeviceEngine(Engine):
         lane regardless of list length, the block-max pruning payoff."""
         si = self.score_index
         e = np.asarray(entries, np.int64).ravel()
+        if self.resident is not None:
+            from ..store import pages_in_spans
+            self.resident.ensure(pages_in_spans(
+                np.asarray(si.pg_sym_lo[e], np.int64),
+                np.asarray(si.pg_sym_hi[e], np.int64),
+                int(self.pi.page_size)))
+            ps, pu, st = self._pool()
+            out = J.decode_pages_resident(
+                self.pi, ps, pu, st,
+                jnp.asarray(si.pg_sym_lo[e], jnp.int32),
+                jnp.asarray(si.pg_sym_hi[e], jnp.int32),
+                jnp.asarray(si.pg_base[e], jnp.int32),
+                jnp.asarray(si.pg_head[e], jnp.int32),
+                win=int(si.page_size), max_elems=self.page_elem_bucket())
+            return np.asarray(out)
         out = J.decode_pages_batch(
             self.fi,
             jnp.asarray(si.pg_sym_lo[e], jnp.int32),
@@ -448,8 +563,13 @@ class JnpEngine(DeviceEngine):
                  pi: PagedIndex | None = None, **kwargs):
         super().__init__(res, fi=fi, max_short_len=max_short_len, B=B,
                          fallback=fallback, **kwargs)
+        # a store implies paged addressing: the admission cache's unit IS
+        # the stream page, so the flat mirror has no out-of-core form
         self.pi = pi if pi is not None else (
-            build_paged_index(self.fi, page_size) if paged else None)
+            build_paged_index(self.fi, page_size)
+            if (paged or self._wants_store()) else None)
+        if self.pi is not None:
+            self.pi = self._attach_store(self.pi)
 
     def _next_geq_dev(self, list_ids: jax.Array, xs: jax.Array) -> jax.Array:
         if self.pi is not None:

@@ -27,8 +27,10 @@ class HostEngine(Engine):
 
     def __init__(self, res: RePairResult, method: str = "lookup",
                  search: str = "exp", k: int = 8, B: int = 8,
-                 codec=None):
-        super().__init__(res, codec=codec)
+                 codec=None, store=None, resident_pages=None,
+                 resident=None, page_size: int | None = None):
+        super().__init__(res, codec=codec, store=store,
+                         resident_pages=resident_pages, resident=resident)
         if method not in ("skip", "svs", "lookup"):
             raise ValueError(f"unknown host method {method!r}")
         self.method = method
@@ -40,13 +42,29 @@ class HostEngine(Engine):
         # bounded like the decode cache: merged serving rounds touch the
         # whole Zipf head, and accessors hold O(span) decoded state
         self._accs = LRUCache(DECODE_CACHE_SIZE)
+        # out-of-core: the accessors read list symbols through a
+        # RePairResult-shaped store view, so the paper's RAM/disk split
+        # holds on the host tier too — grammar/samplings in RAM, stream
+        # spans faulted through the admission cache (DESIGN.md §11.4);
+        # page_size sets the store's fault granularity (None = the
+        # REPRO_PAGE_SIZE default — a host store has no kernel geometry
+        # to match, so the knob is purely an I/O batching choice)
+        self._init_store(page_size=page_size)
+        if self.resident is not None:
+            from ..store import StoreResView
+            self._qres = StoreResView(res, self.resident)
+        else:
+            self._qres = res
 
     def _acc(self, i: int) -> I.CompressedList:
         if self.method == "svs":
-            return I.SampledList(self.res, i, self.asamp, self.search)
+            return I.SampledList(self._qres, i, self.asamp, self.search)
         if self.method == "lookup":
-            return I.LookupList(self.res, i, self.bsamp)
-        return I.CompressedList(self.res, i)
+            return I.LookupList(self._qres, i, self.bsamp)
+        return I.CompressedList(self._qres, i)
+
+    def _decode_list(self, i: int) -> np.ndarray:
+        return self._qres.decode_list(i)
 
     def _acc_cached(self, i: int) -> I.CompressedList:
         """Accessor reuse across unordered probes: the O(span) setup
@@ -78,10 +96,11 @@ class HostEngine(Engine):
     def _pair(self, a: int, b: int) -> np.ndarray:
         a, b = self.order_by_length([a, b])
         if self.method == "svs":
-            return I.intersect_svs(self.res, a, b, self.asamp, self.search)
+            return I.intersect_svs(self._qres, a, b, self.asamp,
+                                   self.search)
         if self.method == "lookup":
-            return I.intersect_lookup(self.res, a, b, self.bsamp)
-        return I.intersect_skip(self.res, a, b)
+            return I.intersect_lookup(self._qres, a, b, self.bsamp)
+        return I.intersect_skip(self._qres, a, b)
 
     def intersect_pairs(self, pairs: Sequence[tuple[int, int]]
                         ) -> list[np.ndarray]:
@@ -91,4 +110,4 @@ class HostEngine(Engine):
         if not idxs:    # parity with the device engines
             return np.empty(0, dtype=np.int64)
         samp = self.asamp if self.method == "svs" else self.bsamp
-        return I.intersect_multi(self.res, list(idxs), samp, self.search)
+        return I.intersect_multi(self._qres, list(idxs), samp, self.search)

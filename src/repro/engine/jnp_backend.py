@@ -186,6 +186,216 @@ def probe_batch_paged(pi: PagedIndex, long_ids: jax.Array,
     return jax.vmap(one)(long_ids, xs)
 
 
+# -- out-of-core mirrors (DESIGN.md §11.2) -----------------------------------
+#
+# Each program below is the resident-pool twin of a fully-resident program
+# above: identical arithmetic on identical values, with every stream read
+# routed ``global page -> slot_tab -> pool row``.  Pages absent from the
+# pool map to slot -1, clamped to row 0 — such a read can only happen on a
+# lane that is already settled (or at a masked position), where the final
+# selects discard the value, so the differential gates hold bit-exactly
+# with ANY pool contents outside the faulted working set.
+
+def _pool_read(pool: jax.Array, slot_tab: jax.Array, PAGE: int,
+               p: jax.Array) -> jax.Array:
+    """Read absolute stream position ``p`` through the resident slot
+    table.  ``slot_tab`` (num_pages,) global page -> pool row (-1 absent,
+    clamped to 0: reachable only at masked positions)."""
+    npg = slot_tab.shape[0]
+    slot = slot_tab[jnp.minimum(p // PAGE, npg - 1)]
+    return pool[jnp.maximum(slot, 0), p % PAGE]
+
+
+def _next_geq_one_resident(pi: PagedIndex, pool_syms: jax.Array,
+                           pool_sums: jax.Array, slot_tab: jax.Array,
+                           list_id: jax.Array, x: jax.Array) -> jax.Array:
+    """Resident-pool mirror of :func:`_next_geq_one_paged`."""
+    fl = pi.flat
+    T = fl.num_terminals
+    PAGE = pi.page_size
+    npg = slot_tab.shape[0]
+
+    start = fl.starts[list_id]
+    end = fl.starts[list_id + 1]
+    first = fl.firsts[list_id]
+    last = fl.lasts[list_id]
+
+    b = jax.lax.shift_right_logical(x, fl.kbits[list_id])
+    boff = fl.bucket_offsets[list_id]
+    bnum = fl.bucket_offsets[list_id + 1] - boff
+    b = jnp.minimum(b, bnum - 1)
+    pos = pi.bck_page[boff + b] * PAGE + pi.bck_off[boff + b]
+    s = fl.bck_abs[boff + b]
+    pos = jnp.where(x <= first, start, pos)
+    s = jnp.where(x <= first, first, s)
+
+    def scan_body(_, ps_state):
+        pos, s = ps_state
+        in_range = pos < end
+        ps = jnp.where(in_range,
+                       _pool_read(pool_sums, slot_tab, PAGE, pos), 0)
+        take = in_range & (s + ps < x)
+        return (pos + jnp.where(take, 1, 0), s + jnp.where(take, ps, 0))
+
+    pos, s = jax.lax.fori_loop(0, fl.max_scan, scan_body, (pos, s))
+    done_early = s >= x
+    past_end = pos >= end
+
+    sym0 = _pool_read(pool_syms, slot_tab, PAGE,
+                      jnp.minimum(pos, npg * PAGE - 1))
+
+    def descend_body(_, state):
+        sym, s = state
+        is_rule = sym >= T
+        l = jnp.where(is_rule, fl.sym_left[sym], sym)
+        r = jnp.where(is_rule, fl.sym_right[sym], sym)
+        ls = fl.sym_sum[l]
+        go_left = s + ls >= x
+        new_sym = jnp.where(go_left, l, r)
+        new_s = jnp.where(go_left, s, s + ls)
+        return (jnp.where(is_rule, new_sym, sym),
+                jnp.where(is_rule, new_s, s))
+
+    sym_f, s_f = jax.lax.fori_loop(0, fl.max_depth, descend_body, (sym0, s))
+    answer = s_f + fl.sym_sum[sym_f]
+
+    out = jnp.where(done_early, s, answer)
+    out = jnp.where(past_end & ~done_early, INT_INF, out)
+    out = jnp.where(x > last, INT_INF, out)
+    return out.astype(jnp.int32)
+
+
+@jax.jit
+def next_geq_batch_resident(pi: PagedIndex, pool_syms: jax.Array,
+                            pool_sums: jax.Array, slot_tab: jax.Array,
+                            list_ids: jax.Array, xs: jax.Array) -> jax.Array:
+    """Out-of-core twin of :func:`next_geq_batch_paged` — bit-exact
+    provided the probes' working set is resident (the engine faults it in
+    before launching)."""
+    return jax.vmap(partial(_next_geq_one_resident, pi, pool_syms,
+                            pool_sums, slot_tab))(list_ids, xs)
+
+
+@partial(jax.jit, static_argnames=("max_len",))
+def expand_batch_resident(pi: PagedIndex, pool_syms: jax.Array,
+                          pool_sums: jax.Array, slot_tab: jax.Array,
+                          list_ids: jax.Array, max_len: int) -> jax.Array:
+    """Out-of-core twin of :func:`expand_batch`: same positional descent,
+    stream symbols read through the pool, phrase sums read from the
+    pre-gathered sums pages (``sym_sum[c]`` by construction)."""
+    fl = pi.flat
+    T = fl.num_terminals
+    PAGE = pi.page_size
+    npg = slot_tab.shape[0]
+
+    def one(list_id):
+        start = fl.starts[list_id]
+        end = fl.starts[list_id + 1]
+        first = fl.firsts[list_id]
+        length = fl.lengths[list_id]
+
+        win = max_len
+        idx = start + jnp.arange(win, dtype=jnp.int32)
+        valid = idx < end
+        safe = jnp.minimum(idx, npg * PAGE - 1)
+        syms = jnp.where(valid, _pool_read(pool_syms, slot_tab, PAGE, safe),
+                         0)
+        lens = jnp.where(valid, fl.sym_len[syms], 0)
+        sums = jnp.where(valid, _pool_read(pool_sums, slot_tab, PAGE, safe),
+                         0)
+        cum_len = jnp.cumsum(lens)
+        cum_sum = jnp.cumsum(sums) + first
+
+        t = jnp.arange(1, max_len + 1, dtype=jnp.int32)
+        k = jnp.searchsorted(cum_len, t, side="left").astype(jnp.int32)
+        k = jnp.minimum(k, win - 1)
+        base_s = jnp.where(k > 0, cum_sum[jnp.maximum(k - 1, 0)], first)
+        base_t = jnp.where(k > 0, cum_len[jnp.maximum(k - 1, 0)], 0)
+        sym0 = syms[k]
+        want = t - base_t
+
+        def body(_, state):
+            sym, s, w = state
+            is_rule = sym >= T
+            l = jnp.where(is_rule, fl.sym_left[sym], sym)
+            r = jnp.where(is_rule, fl.sym_right[sym], sym)
+            ll = fl.sym_len[l]
+            go_left = w <= ll
+            nsym = jnp.where(go_left, l, r)
+            ns = jnp.where(go_left, s, s + fl.sym_sum[l])
+            nw = jnp.where(go_left, w, w - ll)
+            return (jnp.where(is_rule, nsym, sym),
+                    jnp.where(is_rule, ns, s),
+                    jnp.where(is_rule, nw, w))
+
+        symf, sf, _ = jax.lax.fori_loop(
+            0, fl.max_depth, body, (sym0, base_s, want))
+        vals = sf + fl.sym_sum[symf]
+        out = jnp.concatenate([first[None], vals[: max_len - 1]])
+        pos = jnp.arange(max_len, dtype=jnp.int32)
+        return jnp.where(pos < length, out, INT_INF).astype(jnp.int32)
+
+    return jax.vmap(one)(list_ids)
+
+
+@partial(jax.jit, static_argnames=("win", "max_elems"))
+def decode_pages_resident(pi: PagedIndex, pool_syms: jax.Array,
+                          pool_sums: jax.Array, slot_tab: jax.Array,
+                          sym_lo: jax.Array, sym_hi: jax.Array,
+                          base: jax.Array, head: jax.Array, *, win: int,
+                          max_elems: int) -> jax.Array:
+    """Out-of-core twin of :func:`decode_pages_batch` (block-max page-entry
+    decode for the ranked tier) over the resident pool."""
+    fl = pi.flat
+    T = fl.num_terminals
+    PAGE = pi.page_size
+    npg = slot_tab.shape[0]
+
+    def one(lo, hi, base, head):
+        idx = lo + jnp.arange(win, dtype=jnp.int32)
+        valid = idx < hi
+        safe = jnp.minimum(idx, npg * PAGE - 1)
+        syms = jnp.where(valid, _pool_read(pool_syms, slot_tab, PAGE, safe),
+                         0)
+        lens = jnp.where(valid, fl.sym_len[syms], 0)
+        sums = jnp.where(valid, _pool_read(pool_sums, slot_tab, PAGE, safe),
+                         0)
+        cum_len = jnp.cumsum(lens)
+        cum_sum = jnp.cumsum(sums) + base
+        total = head + cum_len[win - 1]
+
+        j = jnp.arange(max_elems, dtype=jnp.int32)
+        want = j - head + 1
+        w = jnp.maximum(want, 1)
+        k = jnp.searchsorted(cum_len, w, side="left").astype(jnp.int32)
+        k = jnp.minimum(k, win - 1)
+        base_s = jnp.where(k > 0, cum_sum[jnp.maximum(k - 1, 0)], base)
+        base_t = jnp.where(k > 0, cum_len[jnp.maximum(k - 1, 0)], 0)
+        sym0 = syms[k]
+
+        def body(_, state):
+            sym, s, wrem = state
+            is_rule = sym >= T
+            l = jnp.where(is_rule, fl.sym_left[sym], sym)
+            r = jnp.where(is_rule, fl.sym_right[sym], sym)
+            ll = fl.sym_len[l]
+            go_left = wrem <= ll
+            nsym = jnp.where(go_left, l, r)
+            ns = jnp.where(go_left, s, s + fl.sym_sum[l])
+            nw = jnp.where(go_left, wrem, wrem - ll)
+            return (jnp.where(is_rule, nsym, sym),
+                    jnp.where(is_rule, ns, s),
+                    jnp.where(is_rule, nw, wrem))
+
+        symf, sf, _ = jax.lax.fori_loop(
+            0, fl.max_depth, body, (sym0, base_s, w - base_t))
+        vals = sf + fl.sym_sum[symf]
+        out = jnp.where(want < 1, base, vals)
+        return jnp.where(j < total, out, INT_INF).astype(jnp.int32)
+
+    return jax.vmap(one)(sym_lo, sym_hi, base, head)
+
+
 def build_bys_table(fi: FlatIndex) -> jnp.ndarray:
     """Phrase-sum prefix table for the batched binary-search path:
     ``incl[pos]`` = absolute value of the LAST element expanded by the

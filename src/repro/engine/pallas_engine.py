@@ -51,8 +51,16 @@ class PallasEngine(DeviceEngine):
                           else interpret)
         self.pi = pi if pi is not None else build_paged_index(self.fi,
                                                               page_size)
-        self._tables, self._statics, self._host = K.pad_paged_operands(
-            self.pi)
+        if self._wants_store():
+            # pack the RAM-tier operands only — the stream pages stay in
+            # the admission cache's pool and enter each launch through the
+            # scalar-prefetched slot table (DESIGN.md §11.2)
+            self._tables, self._statics, self._host = K.pad_paged_operands(
+                self.pi, include_stream=False)
+            self.pi = self._attach_store(self.pi)
+        else:
+            self._tables, self._statics, self._host = K.pad_paged_operands(
+                self.pi)
         self._score_pack = None   # page_score operands, first ranked query
 
     # -- ranked scoring (DESIGN.md §9) --------------------------------------
@@ -72,7 +80,10 @@ class PallasEngine(DeviceEngine):
         engine's page boundaries; a foreign geometry falls back to the
         windowed jnp decode (which reads the flat stream)."""
         si = self.score_index
-        if int(si.page_size) != int(self.pi.page_size):
+        if (self.resident is not None
+                or int(si.page_size) != int(self.pi.page_size)):
+            # out of core the fused kernel's full-stream operand pack does
+            # not exist; the windowed jnp decode reads the resident pool
             return super().decode_page_batch(entries)
         if self._score_pack is None:
             self._score_pack = PS.pad_score_operands(self.pi)
@@ -89,6 +100,16 @@ class PallasEngine(DeviceEngine):
         return K.next_geq_paged(self._tables, self._host,
                                 np.asarray(list_ids), np.asarray(xs),
                                 interpret=self.interpret, **self._statics)
+
+    def _next_geq_resident(self, lids, xs) -> np.ndarray:
+        """Kernel launch against the admission cache: the router's page
+        windows are remapped through the resident slot table into the
+        scalar-prefetch index_map, so the DMA engine fetches pool rows
+        while the kernel's offset math stays in stream coordinates."""
+        return K.next_geq_resident(self._tables, self._host, self.resident,
+                                   np.asarray(lids), np.asarray(xs),
+                                   interpret=self.interpret,
+                                   **self._statics)
 
     # -- codec-tier device paths (DESIGN.md §10.4) --------------------------
 

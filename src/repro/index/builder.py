@@ -34,6 +34,10 @@ class InvertedIndex:
     bitmaps: dict[int, BM.Bitmap]
     codecs: dict[str, CD.EncodedLists]
     term_of_list: np.ndarray | None = None
+    #: out-of-core tier (DESIGN.md §11): the compressed stream behind a
+    #: PageStore when the build requested one (store=/REPRO_STORE axis);
+    #: None keeps today's fully-in-RAM layout
+    page_store: object = None
 
     def list_length(self, i: int) -> int:
         return int(len(self.lists[i]))
@@ -93,6 +97,8 @@ def build_index(
     max_rules: int | None = None,
     builder: str | Builder = "host",
     build_cfg: BuildConfig | None = None,
+    store: str | None = None,
+    page_size: int | None = None,
 ) -> InvertedIndex:
     lists = [np.asarray(l, dtype=np.int64) for l in lists]
     u = universe or max(int(l[-1]) + 1 for l in lists)
@@ -134,7 +140,15 @@ def build_index(
     b_samp = build_b_sampling(rep, b_B)
     enc = {name: CD.encode_lists(lists, name, k=codec_k, universe=u)
            for name in codecs}
+    # out-of-core storage axis (DESIGN.md §11): write the paged stream
+    # (+ per-page phrase sums) at build time — ``store=None`` honors
+    # REPRO_STORE, ""/"none" keeps the fully-resident layout
+    from ..store import build_page_store, resolve_store_kind
+    kind = resolve_store_kind(store)
+    page_store = (build_page_store(rep, kind=kind, page_size=page_size)
+                  if kind is not None else None)
     return InvertedIndex(
         lists=lists, universe=u, repair=rep, a_samp=a_samp, b_samp=b_samp,
         bitmap_idx=bitmap_idx, bitmaps=bitmaps, codecs=enc,
+        page_store=page_store,
     )

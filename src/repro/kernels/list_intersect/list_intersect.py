@@ -56,7 +56,8 @@ def _gather(table: jax.Array, idx: jax.Array, width: int) -> jax.Array:
     return jnp.sum(jnp.where(onehot, table[None, :], 0), axis=1)
 
 
-def _paged_intersect_kernel(base_ref, lids_ref, xs_ref, pos0_ref, s0_ref,
+def _paged_intersect_kernel(base_ref, slots_ref, lids_ref, xs_ref,
+                            pos0_ref, s0_ref,
                             starts_ref, lasts_ref, sleft_ref, sright_ref,
                             ssum_ref, csyms_ref, csums_ref, out_ref,
                             pos_sc, s_sc, val_sc, done_sc, *,
@@ -86,7 +87,10 @@ def _paged_intersect_kernel(base_ref, lids_ref, xs_ref, pos0_ref, s0_ref,
         val_sc[0, :] = jnp.where(done, val, INT_INF)
         done_sc[0, :] = done.astype(jnp.int32)
 
-    cur = base_ref[i] + k                      # resident page id
+    cur = base_ref[i] + k                      # GLOBAL page id (offset math
+    #                                            stays in stream coordinates;
+    #                                            slots_ref only steers which
+    #                                            storage row the DMA reads)
     pos = pos_sc[0, :]
     s = s_sc[0, :]
     done = done_sc[0, :] != 0
@@ -151,7 +155,8 @@ def _paged_intersect_kernel(base_ref, lids_ref, xs_ref, pos0_ref, s0_ref,
         out_ref[0, :] = val_sc[0, :]
 
 
-def paged_intersect_pallas(tile_base: jax.Array, lids: jax.Array,
+def paged_intersect_pallas(tile_base: jax.Array, tile_slots: jax.Array,
+                           lids: jax.Array,
                            xs: jax.Array, pos0: jax.Array, s0: jax.Array,
                            starts: jax.Array, lasts: jax.Array,
                            sleft: jax.Array, sright: jax.Array,
@@ -163,28 +168,36 @@ def paged_intersect_pallas(tile_base: jax.Array, lids: jax.Array,
 
     ``tile_base`` (Q // TILE_Q,) int32 — first stream page each query tile
     may touch (host page routing guarantees ``tile_base[i] + k_pages`` never
-    exceeds ``num_pages``); ``lids/xs/pos0/s0`` (Q,) int32 queries sorted by
-    anchor page with their bucket-lookup start state; ``csyms_pg/csums_pg``
-    (num_pages, PAGE) paged stream; remaining tables 1-D lane-padded.
+    exceeds ``num_pages``); ``tile_slots`` (Q // TILE_Q, k_pages) int32 —
+    the STORAGE row holding page ``tile_base[i] + k``: the identity map
+    ``tile_base[i] + k`` when the stream is fully resident, or the
+    admission cache's slot table when ``csyms_pg/csums_pg`` are the
+    bounded resident pool (DESIGN.md §11.2 — the kernel's offset math
+    stays in global stream coordinates either way, only the BlockSpec
+    index_map reads the remap); ``lids/xs/pos0/s0`` (Q,) int32 queries
+    sorted by anchor page with their bucket-lookup start state;
+    ``csyms_pg/csums_pg`` (num_rows, PAGE) paged stream or pool;
+    remaining tables 1-D lane-padded.
     Returns (Q,) int32 next_geq values (INT_INF past the end), bit-exact vs
     ``engine.jnp_backend.next_geq_batch_paged``."""
     Q = lids.shape[0]
-    num_pages, page = csyms_pg.shape
+    page = csyms_pg.shape[1]
     dims = dict(l1_pad=starts.shape[0], l_pad=lasts.shape[0],
                 s_pad=ssum.shape[0])
     kernel = lambda *refs: _paged_intersect_kernel(
         *refs, max_scan=max_scan, max_depth=max_depth, T=T, page=page,
         k_pages=k_pages, **dims)
-    qspec = pl.BlockSpec((1, TILE_Q), lambda i, k, b: (0, i))
-    tspec = lambda a: pl.BlockSpec((1, a.shape[0]), lambda i, k, b: (0, 0))
-    pgspec = pl.BlockSpec((1, page), lambda i, k, b: (b[i] + k, 0))
+    qspec = pl.BlockSpec((1, TILE_Q), lambda i, k, b, sl: (0, i))
+    tspec = lambda a: pl.BlockSpec((1, a.shape[0]),
+                                   lambda i, k, b, sl: (0, 0))
+    pgspec = pl.BlockSpec((1, page), lambda i, k, b, sl: (sl[i, k], 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(Q // TILE_Q, k_pages),
         in_specs=[qspec, qspec, qspec, qspec,
                   tspec(starts), tspec(lasts), tspec(sleft), tspec(sright),
                   tspec(ssum), pgspec, pgspec],
-        out_specs=pl.BlockSpec((1, TILE_Q), lambda i, k, b: (0, i)),
+        out_specs=pl.BlockSpec((1, TILE_Q), lambda i, k, b, sl: (0, i)),
         scratch_shapes=[pltpu.VMEM((1, TILE_Q), jnp.int32)
                         for _ in range(4)],
     )
@@ -193,6 +206,7 @@ def paged_intersect_pallas(tile_base: jax.Array, lids: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((1, Q), jnp.int32),
         interpret=interpret,
-    )(tile_base, lids[None, :], xs[None, :], pos0[None, :], s0[None, :],
+    )(tile_base, tile_slots, lids[None, :], xs[None, :], pos0[None, :],
+      s0[None, :],
       starts[None, :], lasts[None, :], sleft[None, :], sright[None, :],
       ssum[None, :], csyms_pg, csums_pg)[0]

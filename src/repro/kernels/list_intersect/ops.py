@@ -41,21 +41,13 @@ def _pad1(a: jax.Array, mult: int = 128) -> jax.Array:
     return jnp.zeros(np_, jnp.int32).at[:n].set(a.astype(jnp.int32))
 
 
-def pad_paged_operands(pi: PagedIndex
-                       ) -> tuple[tuple[jax.Array, ...], dict, dict]:
-    """Kernel operand pack for one paged index: device tables (lane-padded
-    broadcast tables + the paged stream), static bounds, and the numpy
-    routing snapshot.  Compute once per index (PallasEngine caches this at
-    construction)."""
+def routing_snapshot(pi: PagedIndex) -> dict:
+    """Numpy snapshot of the routing tables — everything the host page
+    router (and the out-of-core working-set computation) needs.  These are
+    the RAM-tier directories of the paper's secondary-memory split; only
+    the stream itself may live behind a page store."""
     fl = pi.flat
-    tables = (
-        _pad1(fl.starts), _pad1(fl.lasts),
-        _pad1(fl.sym_left), _pad1(fl.sym_right), _pad1(fl.sym_sum),
-        pi.c_syms_pg.astype(jnp.int32), pi.c_sums_pg.astype(jnp.int32),
-    )
-    statics = dict(max_scan=fl.max_scan, max_depth=fl.max_depth,
-                   T=fl.num_terminals)
-    host = dict(
+    return dict(
         starts=np.asarray(fl.starts, np.int64),
         firsts=np.asarray(fl.firsts, np.int64),
         lasts=np.asarray(fl.lasts, np.int64),
@@ -69,20 +61,34 @@ def pad_paged_operands(pi: PagedIndex
         num_pages=pi.num_pages,
         max_scan=fl.max_scan,
     )
-    return tables, statics, host
 
 
-def route_pages(host: dict, list_ids: np.ndarray, xs: np.ndarray):
-    """Host half of the paged query path: bucket lookup + page scheduling.
+def pad_paged_operands(pi: PagedIndex, include_stream: bool = True
+                       ) -> tuple[tuple[jax.Array, ...], dict, dict]:
+    """Kernel operand pack for one paged index: device tables (lane-padded
+    broadcast tables + the paged stream), static bounds, and the numpy
+    routing snapshot.  Compute once per index (PallasEngine caches this at
+    construction).  ``include_stream=False`` omits the two paged stream
+    tables — the out-of-core path substitutes the resident pool per launch
+    (DESIGN.md §11.2)."""
+    fl = pi.flat
+    tables = (
+        _pad1(fl.starts), _pad1(fl.lasts),
+        _pad1(fl.sym_left), _pad1(fl.sym_right), _pad1(fl.sym_sum),
+    )
+    if include_stream:
+        tables += (pi.c_syms_pg.astype(jnp.int32),
+                   pi.c_sums_pg.astype(jnp.int32))
+    statics = dict(max_scan=fl.max_scan, max_depth=fl.max_depth,
+                   T=fl.num_terminals)
+    return tables, statics, routing_snapshot(pi)
 
-    Returns ``(order, tile_base, k_pages, lids, xs, pos0, s0)`` where the
-    query arrays are sorted by anchor page and padded to a TILE_Q multiple
-    (by repeating the final query), ``tile_base[i]`` is the first page tile
-    ``i`` may touch, and ``k_pages`` is the static per-tile page count.
-    ``out_sorted[np.argsort(order)]`` restores request order (truncate the
-    padding first)."""
-    lids = np.asarray(list_ids, np.int64)
-    xq = np.asarray(xs, np.int64)
+
+def _probe_windows(host: dict, lids: np.ndarray, xq: np.ndarray):
+    """Shared host half of the bucket lookup: start state + per-lane page
+    windows.  Returns ``(needs, act_lo, act_hi, end_page, pos0, s0)`` —
+    ``needs`` lanes will read pages ``[act_lo, act_hi]``; settled lanes
+    read nothing (bit-identical arithmetic to the device paths)."""
     page = host["page"]
     num_pages = host["num_pages"]
     max_scan = host["max_scan"]
@@ -105,21 +111,56 @@ def route_pages(host: dict, list_ids: np.ndarray, xs: np.ndarray):
     pos0 = np.where(head, start, pos0)
     s0 = np.where(head, first, s0)
 
-    # Active lanes sort by anchor page; their window is capped both by the
-    # skip budget and by the list's final page from the page directory
-    # (reads stop strictly before ``end``, and ``page_dir[lid + 1]`` is
-    # ``starts[lid + 1] // page`` — a list ending early in a page never
-    # drags later pages in).  Lanes that settle at k == 0 never read a
-    # page; they park at the LOWEST active anchor page so they cluster
-    # into spread-1 tiles instead of widening a mixed tile's page window
-    # (parking at a fixed page would reinflate k_pages toward num_pages).
+    # A lane's window is capped both by the skip budget and by the list's
+    # final page from the page directory (reads stop strictly before
+    # ``end``, and ``page_dir[lid + 1]`` is ``starts[lid + 1] // page`` —
+    # a list ending early in a page never drags later pages in).
     needs = (s0 < xq) & (pos0 < end) & (xq <= last)
     act_lo = np.clip(pos0 // page, 0, num_pages - 1)
     end_page = np.clip(host["page_dir"][lids + 1], 0, num_pages - 1)
+    act_hi = np.minimum((pos0 + max_scan) // page, end_page)
+    return needs, act_lo, act_hi, pos0, s0
+
+
+def probe_working_set(host: dict, list_ids, xs) -> np.ndarray:
+    """Unique stream pages the probe batch can touch — exactly the union
+    of the active lanes' ``[act_lo, act_hi]`` windows the router schedules
+    (settled lanes never read).  This is what the scheduler faults between
+    ticks (DESIGN.md §11.3)."""
+    lids = np.asarray(list_ids, np.int64)
+    xq = np.asarray(xs, np.int64)
+    if lids.size == 0:
+        return np.zeros(0, np.int64)
+    needs, lo, hi, _, _ = _probe_windows(host, lids, xq)
+    if not needs.any():
+        return np.zeros(0, np.int64)
+    lo, hi = lo[needs], hi[needs]
+    width = int((hi - lo).max()) + 1
+    grid = lo[:, None] + np.arange(width, dtype=np.int64)
+    return np.unique(grid[grid <= hi[:, None]])
+
+
+def route_pages(host: dict, list_ids: np.ndarray, xs: np.ndarray):
+    """Host half of the paged query path: bucket lookup + page scheduling.
+
+    Returns ``(order, tile_base, k_pages, lids, xs, pos0, s0)`` where the
+    query arrays are sorted by anchor page and padded to a TILE_Q multiple
+    (by repeating the final query), ``tile_base[i]`` is the first page tile
+    ``i`` may touch, and ``k_pages`` is the static per-tile page count.
+    ``out_sorted[np.argsort(order)]`` restores request order (truncate the
+    padding first)."""
+    lids = np.asarray(list_ids, np.int64)
+    xq = np.asarray(xs, np.int64)
+    num_pages = host["num_pages"]
+
+    # Lanes that settle at k == 0 never read a page; they park at the
+    # LOWEST active anchor page so they cluster into spread-1 tiles
+    # instead of widening a mixed tile's page window (parking at a fixed
+    # page would reinflate k_pages toward num_pages).
+    needs, act_lo, act_hi, pos0, s0 = _probe_windows(host, lids, xq)
     park = int(act_lo[needs].min()) if needs.any() else 0
     lo = np.where(needs, act_lo, park)
-    hi = np.where(needs, np.minimum((pos0 + max_scan) // page, end_page),
-                  park)
+    hi = np.where(needs, act_hi, park)
 
     order = np.argsort(lo, kind="stable")
     q = order.size
@@ -141,14 +182,50 @@ def route_pages(host: dict, list_ids: np.ndarray, xs: np.ndarray):
 @partial(jax.jit, static_argnames=("max_scan", "max_depth", "T", "k_pages",
                                    "interpret"))
 def _paged_call(tables: tuple[jax.Array, ...], tile_base: jax.Array,
-                lids: jax.Array, xs: jax.Array, pos0: jax.Array,
-                s0: jax.Array, *, max_scan: int, max_depth: int, T: int,
-                k_pages: int, interpret: bool) -> jax.Array:
+                tile_slots: jax.Array, lids: jax.Array, xs: jax.Array,
+                pos0: jax.Array, s0: jax.Array, *, max_scan: int,
+                max_depth: int, T: int, k_pages: int,
+                interpret: bool) -> jax.Array:
     starts, lasts, sleft, sright, ssum, csyms_pg, csums_pg = tables
     return paged_intersect_pallas(
-        tile_base, lids, xs, pos0, s0, starts, lasts, sleft, sright, ssum,
-        csyms_pg, csums_pg, max_scan=max_scan, max_depth=max_depth, T=T,
-        k_pages=k_pages, interpret=interpret)
+        tile_base, tile_slots, lids, xs, pos0, s0, starts, lasts, sleft,
+        sright, ssum, csyms_pg, csums_pg, max_scan=max_scan,
+        max_depth=max_depth, T=T, k_pages=k_pages, interpret=interpret)
+
+
+def _launch_routed(tables, host, list_ids, xs, *, max_scan, max_depth, T,
+                   interpret, resident=None) -> np.ndarray:
+    """Route, remap page ids to storage rows, launch, unsort.
+
+    Fully-resident: the storage rows ARE the global page ids (identity
+    ``tile_slots``).  Out-of-core: each tile's K consecutive page ids map
+    through the resident slot table into the bounded pool — absent pages
+    clamp to slot 0, which is provably never *selected* (a lane only
+    commits values from pages inside its own routed window, and the
+    working set was faulted in before the launch)."""
+    q = np.asarray(list_ids).shape[0]
+    if q == 0:
+        return np.zeros(0, np.int32)
+    order, base, k_pages, lids_s, xs_s, pos0_s, s0_s = route_pages(
+        host, list_ids, xs)
+    tile_pages = base[:, None].astype(np.int64) + np.arange(k_pages)
+    if resident is None:
+        tile_slots = tile_pages.astype(np.int32)
+        csyms, csums = tables[5], tables[6]
+    else:
+        resident.ensure(probe_working_set(host, list_ids, xs))
+        tile_slots = np.maximum(
+            resident.slot_of_page[tile_pages], 0).astype(np.int32)
+        csyms, csums, _ = resident.device_tables()
+        tables = tables[:5] + (csyms, csums)
+    out = _paged_call(tables, jnp.asarray(base), jnp.asarray(tile_slots),
+                      jnp.asarray(lids_s), jnp.asarray(xs_s),
+                      jnp.asarray(pos0_s), jnp.asarray(s0_s),
+                      max_scan=max_scan, max_depth=max_depth, T=T,
+                      k_pages=k_pages, interpret=interpret)
+    unsort = np.empty(q, np.int64)
+    unsort[order] = np.arange(q)
+    return np.asarray(out)[:q][unsort]
 
 
 def next_geq_paged(tables: tuple[jax.Array, ...], host: dict,
@@ -160,19 +237,21 @@ def next_geq_paged(tables: tuple[jax.Array, ...], host: dict,
     request order.  numpy in, numpy out: the router already lives on the
     host and the unsort forces a device sync anyway, so returning numpy
     avoids a pointless bounce back to device at the engine boundary."""
-    q = np.asarray(list_ids).shape[0]
-    if q == 0:
-        return np.zeros(0, np.int32)
-    order, base, k_pages, lids_s, xs_s, pos0_s, s0_s = route_pages(
-        host, list_ids, xs)
-    out = _paged_call(tables, jnp.asarray(base), jnp.asarray(lids_s),
-                      jnp.asarray(xs_s), jnp.asarray(pos0_s),
-                      jnp.asarray(s0_s), max_scan=max_scan,
-                      max_depth=max_depth, T=T, k_pages=k_pages,
-                      interpret=interpret)
-    unsort = np.empty(q, np.int64)
-    unsort[order] = np.arange(q)
-    return np.asarray(out)[:q][unsort]
+    return _launch_routed(tables, host, list_ids, xs, max_scan=max_scan,
+                          max_depth=max_depth, T=T, interpret=interpret)
+
+
+def next_geq_resident(tables: tuple[jax.Array, ...], host: dict, resident,
+                      list_ids: np.ndarray, xs: np.ndarray, *,
+                      max_scan: int, max_depth: int, T: int,
+                      interpret: bool) -> np.ndarray:
+    """Out-of-core variant of :func:`next_geq_paged`: ``tables`` is the
+    5-entry fixed pack (``include_stream=False``); the paged stream comes
+    from ``resident``'s pool with scalar-prefetch indices remapped through
+    its slot table (DESIGN.md §11.2)."""
+    return _launch_routed(tables, host, list_ids, xs, max_scan=max_scan,
+                          max_depth=max_depth, T=T, interpret=interpret,
+                          resident=resident)
 
 
 def _as_paged(index: FlatIndex | PagedIndex) -> PagedIndex:

@@ -24,7 +24,9 @@ def serve_queries(n_queries: int, engine: str = "jnp",
                   refreshes: int = 0, query: str | None = None,
                   concurrency: int = 0, topk: int = 0,
                   batch_window: int | None = None,
-                  codec: str | None = None) -> None:
+                  codec: str | None = None,
+                  store: str | None = None,
+                  resident_pages: int | None = None) -> None:
     from ..build import make_builder
     from ..index import zipf_corpus
     from ..serve.query_serve import QueryServer
@@ -55,11 +57,19 @@ def serve_queries(n_queries: int, engine: str = "jnp",
         mesh = Mesh(_np.array(devs[:data_shards]), ("data",))
         print(f"shard_map dispatch over data axis: {data_shards} device(s)")
     srv = QueryServer(res, max_short_len=256, engine=engine, mesh=mesh,
-                      batch_window=batch_window, codec=codec)
+                      batch_window=batch_window, codec=codec,
+                      store=store, resident_pages=resident_pages)
     if srv.engine.tier is not None:
         rep = srv.engine.tier.space_report(res)
         print(f"codec tier [{rep['mode']}]: {rep['counts']} "
               f"({rep['bits_per_posting']:.2f} bits/posting)")
+    if srv.engine.resident is not None:
+        ss = srv.engine.resident.stats()
+        extra = (f", {srv.engine.store.disk_bytes/1e6:.1f} MB on disk"
+                 if hasattr(srv.engine.store, "disk_bytes") else "")
+        print(f"page store [{ss['kind']}]: {ss['num_pages']} pages x "
+              f"{ss['page_size']} syms, resident budget {ss['budget']}"
+              f"{extra}")
     rng = np.random.default_rng(0)
     pairs = [tuple(map(int, rng.choice(len(lists), 2, replace=False)))
              for _ in range(n_queries)]
@@ -109,6 +119,13 @@ def serve_queries(n_queries: int, engine: str = "jnp",
               f"{st['coalescing_factor']:.2f} over {st['dispatches']} "
               f"merged dispatches (window {st['batch_window']}), "
               f"spot checks OK")
+        if st["store"] is not None:
+            print(f"admission cache: {st['page_faults']} faults / "
+                  f"{st['page_evictions']} evictions, "
+                  f"{st['resident_pages']} pages resident "
+                  f"(budget {st['store']['budget']}), "
+                  f"{st['fault_bytes']/1e6:.2f} MB faulted, hit rate "
+                  f"{st['store_hit_rate']:.3f}")
 
     # ranked retrieval (DESIGN.md §9): BM25 top-k with block-max page
     # pruning through the same coalescing scheduler; the telemetry window
@@ -230,13 +247,23 @@ def main() -> None:
                     help="per-list codec tier (DESIGN.md §10): force one "
                          "codec or 'adaptive' cost-model selection "
                          "(default: repair, or REPRO_CODEC)")
+    ap.add_argument("--store", default=None,
+                    choices=("memory", "mmap"),
+                    help="out-of-core page store (DESIGN.md §11): serve "
+                         "the compressed stream from a page store behind "
+                         "the bounded admission cache (default: fully "
+                         "resident, or REPRO_STORE)")
+    ap.add_argument("--resident-pages", type=int, default=None,
+                    help="admission-cache budget in pages (default: all "
+                         "pages, or REPRO_RESIDENT_PAGES)")
     args = ap.parse_args()
     if args.tier == "queries":
         serve_queries(args.n, args.engine, data_shards=args.data_shards,
                       builder=args.builder, refreshes=args.refresh,
                       query=args.query, concurrency=args.concurrency,
                       topk=args.topk, batch_window=args.batch_window,
-                      codec=args.codec)
+                      codec=args.codec, store=args.store,
+                      resident_pages=args.resident_pages)
     else:
         serve_lm(args.arch, args.n)
 

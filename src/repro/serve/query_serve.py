@@ -71,7 +71,9 @@ class QueryServer:
                  page_size: int = DEFAULT_PAGE, paged: bool = False,
                  mesh: Mesh | None = None,
                  batch_window: int | None = None,
-                 codec: str | None = None):
+                 codec: str | None = None,
+                 store: str | None = None,
+                 resident_pages: int | None = None):
         self._B = B
         self.max_short_len = max_short_len
         # engine construction parameters, kept so rebuild() can stand up
@@ -79,9 +81,16 @@ class QueryServer:
         # per-list codec tier (DESIGN.md §10): "repair" (default),
         # "ef"/"bitmap" (forced), "adaptive", or None to honor the
         # REPRO_CODEC env override; the rebuilt engine re-runs codec
-        # selection over the fresh index.
+        # selection over the fresh index.  ``store``/``resident_pages``
+        # pick the out-of-core tier (DESIGN.md §11): "memory"/"mmap" (or
+        # None to honor REPRO_STORE) puts the compressed stream behind a
+        # page store with a bounded admission cache — every swap_index
+        # builds a FRESH store + resident pool for the new engine, so the
+        # version-pinning rule extends to the page cache for free
+        # (in-flight queries hold the old engine, hence the old pool).
         self._engine_name = engine
-        kwargs: dict = {"codec": codec}
+        kwargs: dict = {"codec": codec, "store": store,
+                        "resident_pages": resident_pages}
         if engine in ("jnp", "pallas"):
             kwargs.update(max_short_len=max_short_len, B=B, mesh=mesh,
                           page_size=page_size)
@@ -89,6 +98,10 @@ class QueryServer:
                 kwargs["interpret"] = interpret
             else:
                 kwargs["paged"] = paged
+        else:
+            # host tier: page_size only sets the store's fault
+            # granularity (no kernel geometry to match)
+            kwargs["page_size"] = page_size
         self._engine_kwargs = kwargs
         self._batch_window = batch_window
         self._scheduler: QueryScheduler | None = None

@@ -225,6 +225,26 @@ class QueryScheduler:
                 tag = (("score",) if isinstance(fl.pending, ScoreRound)
                        else ("probe", fl.pending.algo))
                 groups.setdefault((id(fl.engine),) + tag, []).append(fl)
+        # fault the tick's page working set BETWEEN rounds: one batched
+        # store gather per engine per tick covering every merged group, so
+        # the dispatches below run against an already-hot resident pool
+        # and the kernel launch shapes stay deterministic (DESIGN.md §11.3)
+        faulting: dict[int, tuple[object, list, list]] = {}
+        for gkey, fls in groups.items():
+            eng = fls[0].engine
+            if getattr(eng, "resident", None) is None:
+                continue
+            probes, scores = faulting.setdefault(
+                gkey[0], (eng, [], []))[1:]
+            for r in (fl.pending for fl in fls):
+                if isinstance(r, ScoreRound):
+                    scores.append(np.asarray(r.entries))
+                else:
+                    probes.append((np.asarray(r.list_ids),
+                                   np.asarray(r.xs)))
+        for eng, probes, scores in faulting.values():
+            eng.prefault(probes,
+                         np.concatenate(scores) if scores else None)
         first_err: BaseException | None = None
         for gkey, fls in groups.items():
             rounds = [fl.pending for fl in fls]
@@ -430,4 +450,21 @@ class QueryScheduler:
                 getattr(self._engine, "codec_dispatches", {})),
             "decode_cache": self.decode_cache.stats(),
             "result_cache": self.result_cache.stats(),
+            # out-of-core admission cache (DESIGN.md §11.5): zeros when
+            # the live engine serves fully resident
+            **self._store_stats(),
         }
+
+    def _store_stats(self) -> dict:
+        resident = getattr(self._engine, "resident", None)
+        if resident is None:
+            return {"page_faults": 0, "page_evictions": 0,
+                    "resident_pages": 0, "fault_bytes": 0,
+                    "store_hit_rate": 0.0, "store": None}
+        s = resident.stats()
+        return {"page_faults": s["page_faults"],
+                "page_evictions": s["page_evictions"],
+                "resident_pages": s["resident_pages"],
+                "fault_bytes": s["fault_bytes"],
+                "store_hit_rate": s["hit_rate_window"],
+                "store": s}

@@ -1,0 +1,221 @@
+"""ResidentSet: the page-level admission cache over a PageStore.
+
+The PR 5 page router already computes, per merged round, exactly which
+stream pages a dispatch will touch.  This class turns that working set
+into an admission cache (DESIGN.md §11.2): a bounded pool of hot pages
+pinned in host memory (mirrored to device on demand), an LRU over page
+ids, and a ``slot_of_page`` scatter table that lets the fixed-shape
+device programs address the pool by *slot* while the router keeps
+thinking in *global* page ids.
+
+Contract with the dispatch loop (DESIGN.md §11.3):
+
+* ``ensure(pages)`` is called BETWEEN ticks with the union working set of
+  the tick's merged rounds — misses are served by ONE batched
+  ``store.gather`` (so device dispatch shapes stay pow2-stable and jit
+  entries stay O(log Q); faults never happen inside a traced program);
+* the request set is pinned for the duration of the call — LRU eviction
+  never evicts a page the current tick needs; if a single tick needs more
+  pages than the budget, the pool grows to the next power of two (counted
+  in ``pool_grows`` — capacity is a floor for correctness, a budget for
+  steady state);
+* cache identity follows the engine: ``swap_index`` builds a new engine
+  and therefore a new ResidentSet, while in-flight queries keep the old
+  engine (and its resident pool) alive through their ``_InFlight`` pin —
+  the same ``(index_version, page)`` keying/flush discipline as the
+  decode/result LRUs, implemented structurally.
+"""
+
+from __future__ import annotations
+
+import os
+from collections import OrderedDict, deque
+
+import numpy as np
+
+from .base import PageStore
+
+#: Resident-page budget env knob; <= 0 or unset means "everything fits"
+#: (the cache degenerates to a one-time full materialization).
+RESIDENT_ENV = "REPRO_RESIDENT_PAGES"
+
+_WINDOW = 4096      # bounded hit-rate window (lookups)
+
+
+def resident_budget(resident_pages, num_pages: int) -> int:
+    """Resolve the pool budget: explicit argument wins, else the
+    ``REPRO_RESIDENT_PAGES`` env, else fully resident; always clamped to
+    ``[1, num_pages]``."""
+    if resident_pages is None:
+        env = os.environ.get(RESIDENT_ENV, "").strip()
+        resident_pages = int(env) if env else 0
+    rp = int(resident_pages)
+    if rp <= 0:
+        return max(1, int(num_pages))
+    return max(1, min(rp, int(num_pages)))
+
+
+class ResidentSet:
+    def __init__(self, store: PageStore, budget: int | None = None):
+        self.store = store
+        self.budget = resident_budget(budget, store.num_pages)
+        P = store.page_size
+        self.pool_syms = np.zeros((self.budget, P), np.int32)
+        self.pool_sums = np.zeros((self.budget, P), np.int32)
+        self.slot_of_page = np.full(store.num_pages, -1, np.int32)
+        self._lru: OrderedDict[int, int] = OrderedDict()   # page -> slot
+        self._free = list(range(self.budget - 1, -1, -1))
+        # telemetry
+        self.page_faults = 0
+        self.page_evictions = 0
+        self.fault_bytes = 0
+        self.pool_grows = 0
+        self.lookups = 0
+        self.hits = 0
+        self._window: deque[bool] = deque(maxlen=_WINDOW)
+        # lazy device mirror: full upload once, then incremental scatters
+        self._dev = None
+        self._pending: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        self._slots_dirty = True
+
+    # -- admission -------------------------------------------------------
+
+    def ensure(self, pages) -> None:
+        """Make every page in ``pages`` resident.  The request set is
+        pinned (never evicted within this call); all misses are fetched in
+        ONE batched ``store.gather``."""
+        pages = np.unique(np.asarray(pages, np.int64).reshape(-1))
+        pages = pages[(pages >= 0) & (pages < self.store.num_pages)]
+        if pages.size == 0:
+            return
+        slots = self.slot_of_page[pages]
+        hit = slots >= 0
+        for p in pages[hit]:
+            self._lru.move_to_end(int(p))
+        n_hit = int(hit.sum())
+        self.lookups += int(pages.size)
+        self.hits += n_hit
+        self._window.extend([True] * n_hit +
+                            [False] * (int(pages.size) - n_hit))
+        missing = pages[~hit]
+        if missing.size == 0:
+            return
+        if pages.size > self.budget:
+            self._grow(int(pages.size))
+        alloc: list[int] = []
+        while len(alloc) < missing.size and self._free:
+            alloc.append(self._free.pop())
+        if len(alloc) < missing.size:
+            pinned = set(int(p) for p in pages)
+            for p in list(self._lru):            # oldest first
+                if len(alloc) >= missing.size:
+                    break
+                if p in pinned:
+                    continue
+                alloc.append(self._lru.pop(p))
+                self.slot_of_page[p] = -1
+                self.page_evictions += 1
+        # budget >= |pages| and every non-pinned LRU entry is evictable,
+        # so allocation always succeeds
+        new_slots = np.asarray(alloc, np.int64)
+        syms, sums = self.store.gather(missing)
+        self.pool_syms[new_slots] = syms
+        self.pool_sums[new_slots] = sums
+        self.slot_of_page[missing] = new_slots.astype(np.int32)
+        for p, sl in zip(missing, new_slots):
+            self._lru[int(p)] = int(sl)
+        self.page_faults += int(missing.size)
+        self.fault_bytes += int(missing.size) * self.store.page_size * 8
+        self._pending.append((new_slots.copy(), syms, sums))
+        self._slots_dirty = True
+
+    def _grow(self, min_pages: int) -> None:
+        """One tick needs more pages than the pool holds: grow to the next
+        power of two (correctness floor; the budget stays the steady-state
+        target for eviction pressure)."""
+        new = self.budget
+        while new < min_pages:
+            new *= 2
+        new = min(new, self.store.num_pages)
+        P = self.store.page_size
+        syms = np.zeros((new, P), np.int32)
+        sums = np.zeros((new, P), np.int32)
+        syms[:self.budget] = self.pool_syms
+        sums[:self.budget] = self.pool_sums
+        self._free.extend(range(new - 1, self.budget - 1, -1))
+        self.pool_syms, self.pool_sums = syms, sums
+        self.budget = new
+        self.pool_grows += 1
+        self._dev = None            # pool shape changed: full re-upload
+        self._pending.clear()
+        self._slots_dirty = True
+
+    # -- addressing ------------------------------------------------------
+
+    def read_span(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """Host read of the absolute symbol span ``[lo, hi)`` through the
+        cache (faults the covering pages if needed) — the contiguous-span
+        primitive the paper's host accessors consume."""
+        lo, hi = int(lo), int(hi)
+        if hi <= lo:
+            z = np.zeros(0, np.int32)
+            return z, z
+        P = self.store.page_size
+        p0, p1 = lo // P, (hi - 1) // P
+        pages = np.arange(p0, p1 + 1, dtype=np.int64)
+        self.ensure(pages)
+        slots = self.slot_of_page[pages]
+        a, b = lo - p0 * P, hi - p0 * P
+        return (self.pool_syms[slots].reshape(-1)[a:b],
+                self.pool_sums[slots].reshape(-1)[a:b])
+
+    def device_tables(self):
+        """jnp mirror of ``(pool_syms, pool_sums, slot_of_page)``.  First
+        call uploads the pool; later calls apply the pending fault batches
+        as incremental ``.at[slots].set`` scatters (one per fault batch,
+        i.e. at most one per tick) plus a slot-table refresh."""
+        import jax.numpy as jnp
+        if self._dev is None:
+            self._dev = dict(syms=jnp.asarray(self.pool_syms),
+                             sums=jnp.asarray(self.pool_sums),
+                             slots=jnp.asarray(self.slot_of_page))
+            self._pending.clear()
+            self._slots_dirty = False
+        else:
+            if self._pending:
+                idx = jnp.asarray(np.concatenate(
+                    [p[0] for p in self._pending]))
+                sy = jnp.asarray(np.vstack([p[1] for p in self._pending]))
+                su = jnp.asarray(np.vstack([p[2] for p in self._pending]))
+                self._dev["syms"] = self._dev["syms"].at[idx].set(sy)
+                self._dev["sums"] = self._dev["sums"].at[idx].set(su)
+                self._pending.clear()
+            if self._slots_dirty:
+                self._dev["slots"] = jnp.asarray(self.slot_of_page)
+                self._slots_dirty = False
+        return self._dev["syms"], self._dev["sums"], self._dev["slots"]
+
+    # -- telemetry -------------------------------------------------------
+
+    @property
+    def resident_pages(self) -> int:
+        return len(self._lru)
+
+    def hit_rate_window(self) -> float:
+        if not self._window:
+            return 0.0
+        return sum(self._window) / len(self._window)
+
+    def stats(self) -> dict:
+        return dict(kind=self.store.kind,
+                    budget=self.budget,
+                    num_pages=self.store.num_pages,
+                    page_size=self.store.page_size,
+                    resident_pages=self.resident_pages,
+                    page_faults=self.page_faults,
+                    page_evictions=self.page_evictions,
+                    fault_bytes=self.fault_bytes,
+                    pool_grows=self.pool_grows,
+                    lookups=self.lookups,
+                    hits=self.hits,
+                    hit_rate_window=self.hit_rate_window())
