@@ -1,0 +1,165 @@
+"""Streaming-ingestion benchmark: search under concurrent inserts
+(DESIGN.md §12).
+
+A coverage corpus (doc 0 carries the whole vocabulary, so dense list ids
+equal global term ids on both sides of every check) is split into a base
+build plus an insert stream.  Per ingest rate r we interleave ``r``
+``insert()`` calls with a fixed boolean + ranked query batch per round and
+report qps, p50/p95 latency, and the segment-tier telemetry (flushes,
+flush milliseconds, compactions, live segments).  Rate 0 is the static
+baseline the ingesting cells are read against.
+
+Honest-numbers notes:
+
+* every timed configuration is first replayed on a fresh server with all
+  answers oracle-checked (``naive_eval`` / ``rank_oracle`` — exact docs
+  AND scores), so a qps number can never come from a wrong answer;
+* flush and compaction stalls are INSIDE the timed window — inserts are
+  timed end to end, so the delta-budget flushes and background merges the
+  stream triggers show up in qps/p95 instead of being hidden between
+  measurements (``flush_ms`` tells you how much of the wall went there).
+
+  PYTHONPATH=src python -m benchmarks.run --only ingest
+  PYTHONPATH=src python -m benchmarks.bench_ingest --engine host
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from repro.build import make_builder
+from repro.data.pipeline import PostingsSource
+from repro.engine import validate_engines
+from repro.query import naive_eval
+from repro.query.parser import parse
+from repro.query.topk import rank_oracle
+from repro.serve.query_serve import QueryServer
+
+from .common import BENCH_SEED, emit
+
+DEFAULT_ENGINES = ("host", "jnp")
+INGEST_RATES = (0, 2, 8)
+
+VOCAB = 128
+BASE_DOCS = 96
+ROUNDS = 6
+QUERIES_PER_ROUND = 8
+TOPK = 10
+DELTA_BUDGET = int(os.environ.get("REPRO_DELTA_BUDGET", "12"))
+
+
+def _docs(n_extra):
+    src = PostingsSource(base_docs=BASE_DOCS, growth_docs=32, vocab=VOCAB,
+                         mean_doc_len=20, seed=BENCH_SEED + 7)
+    return [np.arange(VOCAB, dtype=np.int64)] + \
+        [src.doc_terms(d) for d in range(BASE_DOCS - 1 + n_extra)]
+
+
+def _invert(docs):
+    inv = {}
+    for d, terms in enumerate(docs):
+        for t in terms.tolist():
+            inv.setdefault(int(t), []).append(d)
+    return [np.asarray(inv[t], np.int64) for t in sorted(inv)]
+
+
+def _round_queries(rng):
+    """A round's query batch: boolean strings + one ranked term bag."""
+    qs = []
+    for _ in range(QUERIES_PER_ROUND - 2):
+        a, b, c = (int(t) for t in rng.choice(VOCAB, 3, replace=False))
+        qs.append(f"{a} AND {b}" if rng.random() < 0.5
+                  else f"({a} AND {b}) OR NOT {c}")
+    qs.append(f"{int(rng.integers(VOCAB))} AND {int(rng.integers(VOCAB))}")
+    ts = sorted(int(t) for t in rng.choice(VOCAB, 4, replace=False))
+    return qs, ts
+
+
+def _server(engine, res):
+    kw = dict(max_short_len=64)
+    if engine != "host":
+        kw.update(paged=True, page_size=128)
+    return QueryServer(res, engine=engine, **kw)
+
+
+def _drive(engine, rate, *, check):
+    """One full interleaved run; returns (rows aggregate, telemetry).
+    With ``check`` every answer is verified against the oracle over the
+    exact current corpus (the differential gate, per round)."""
+    docs = _docs(ROUNDS * rate)
+    base = docs[:BASE_DOCS]
+    srv = _server(engine, make_builder("host").build_grammar(_invert(base)))
+    srv.enable_ingest(delta_budget=DELTA_BUDGET, compact_fanout=2)
+    rng = np.random.default_rng(BENCH_SEED + 13)
+    lat = []
+    n_queries = 0
+    t_start = time.perf_counter()
+    for r in range(ROUNDS):
+        for d in docs[BASE_DOCS + r * rate:BASE_DOCS + (r + 1) * rate]:
+            srv.insert(d)           # flush/compaction stalls land here
+        qs, ts = _round_queries(rng)
+        t0 = time.perf_counter()
+        outs = srv.search_many(qs)
+        rr = srv.search_topk(ts, TOPK)
+        lat.append((time.perf_counter() - t0) * 1e3)
+        n_queries += len(qs) + 1
+        if check:
+            cur = docs[:BASE_DOCS + (r + 1) * rate]
+            lists, n = _invert(cur), len(cur)
+            for q, got in zip(qs, outs):
+                np.testing.assert_array_equal(
+                    got, naive_eval(parse(q, None), lists, n))
+            od, osc = rank_oracle(lists, n, ts, TOPK)
+            np.testing.assert_array_equal(rr.docs, od)
+            np.testing.assert_array_equal(rr.scores, osc)
+    wall = time.perf_counter() - t_start
+    lat = np.asarray(lat)
+    st = srv.serve_stats()
+    return {
+        "qps": n_queries / wall,
+        "p50_ms": float(np.percentile(lat, 50)),
+        "p95_ms": float(np.percentile(lat, 95)),
+        "wall_s": wall,
+        "n_queries": n_queries,
+    }, {k: st[k] for k in ("segments", "delta_docs", "ingested_docs",
+                           "flushes", "flush_ms", "compactions")}
+
+
+def run(engines=DEFAULT_ENGINES) -> list[dict]:
+    rows = []
+    for name in engines:
+        for rate in INGEST_RATES:
+            _drive(name, rate, check=True)        # the correctness gate
+            timing, tele = _drive(name, rate, check=False)
+            rows.append({"engine": name, "ingest_rate": rate,
+                         **timing, **tele})
+            emit(rows[-1:], f"{name} × ingest rate {rate}")
+    return rows
+
+
+def main(engines=DEFAULT_ENGINES) -> dict:
+    validate_engines(engines)
+    rows = run(engines)
+    return {
+        "seed": BENCH_SEED,
+        "corpus": dict(vocab=VOCAB, base_docs=BASE_DOCS, rounds=ROUNDS,
+                       queries_per_round=QUERIES_PER_ROUND,
+                       delta_budget=DELTA_BUDGET),
+        "ingest_rates": list(INGEST_RATES),
+        "rows": rows,
+        "qps": {f"{r['engine']}/r{r['ingest_rate']}": r["qps"]
+                for r in rows},
+        "p95_ms": {f"{r['engine']}/r{r['ingest_rate']}": r["p95_ms"]
+                   for r in rows},
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", type=str, default=",".join(DEFAULT_ENGINES))
+    args = ap.parse_args()
+    main(engines=tuple(args.engine.split(",")))

@@ -31,6 +31,7 @@ BENCHES = {
     "hybrid": "benchmarks.bench_bitmap_hybrid",
     "optimize": "benchmarks.bench_optimize",
     "outofcore": "benchmarks.bench_outofcore",
+    "ingest": "benchmarks.bench_ingest",
     "roofline": "benchmarks.roofline",
 }
 

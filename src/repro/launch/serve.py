@@ -26,14 +26,39 @@ def serve_queries(n_queries: int, engine: str = "jnp",
                   batch_window: int | None = None,
                   codec: str | None = None,
                   store: str | None = None,
-                  resident_pages: int | None = None) -> None:
+                  resident_pages: int | None = None,
+                  ingest_rate: int = 0, num_docs: int = 2000,
+                  vocab: int = 4000, growth_docs: int = 500,
+                  seed: int = 0) -> None:
     from ..build import make_builder
-    from ..index import zipf_corpus
+    from ..data.pipeline import PostingsSource
     from ..serve.query_serve import QueryServer
 
-    corpus = zipf_corpus(num_docs=2000, vocab_size=4000, seed=0)
-    lists = corpus.postings()
+    # ONE versioned postings feed for the whole launch: the corpus the
+    # server is built from IS the corpus refresh grows — the refresh loop
+    # below consumes only each version's delta, against the same
+    # (num_docs, growth_docs, vocab, seed) the server was launched with
+    src = PostingsSource(base_docs=num_docs, growth_docs=growth_docs,
+                         vocab=vocab, seed=seed)
+    inv: dict[int, list[int]] = {}
+    served_docs = 0
+
+    def extend_corpus(new_docs) -> int:
+        nonlocal served_docs
+        for terms in new_docs:
+            for t in terms.tolist():
+                inv.setdefault(int(t), []).append(served_docs)
+            served_docs += 1
+        return len(new_docs)
+
+    def corpus_lists() -> list[np.ndarray]:
+        return [np.asarray(inv[t], np.int64) for t in sorted(inv)]
+
+    extend_corpus(src.deltas_at(0))
+    lists = corpus_lists()
     n_sym = sum(len(l) for l in lists)
+    print(f"corpus: {served_docs} docs / {len(lists)} lists "
+          f"(vocab {vocab}, seed {seed})")
     # the pallas builder counts against a static candidate table, so give
     # it the [CN07] capped-counting config its table can hold exactly
     # (host/jnp accept the same knob; uncapped they count everything)
@@ -169,13 +194,14 @@ def serve_queries(n_queries: int, engine: str = "jnp",
         print(f"{hits.size} hits in {dt*1e3:.1f} ms (oracle-verified); "
               f"first 10: {hits[:10].tolist()}")
 
-    # index refresh without restarting: grow the collection, rebuild on
-    # the device builder, hot-swap, keep answering (DESIGN.md §3.4)
+    # index refresh without restarting: grow THE SERVED collection by one
+    # version's delta (``deltas_at`` — only the new documents, not an
+    # O(corpus) recompute), rebuild, hot-swap, keep answering
+    # (DESIGN.md §3.4)
     if refreshes:
-        from ..data.pipeline import PostingsSource
-        src = PostingsSource(base_docs=1000, growth_docs=500, seed=0)
         for v in range(1, refreshes + 1):
-            new_lists, _ = src.lists_at(v)
+            added = extend_corpus(src.deltas_at(v))
+            new_lists = corpus_lists()
             t0 = time.perf_counter()
             srv.rebuild(new_lists, builder=bld)   # same config as v0
             dt = time.perf_counter() - t0
@@ -186,8 +212,71 @@ def serve_queries(n_queries: int, engine: str = "jnp",
             for (a, b), got in zip(q, srv.and_batch(q)):
                 np.testing.assert_array_equal(
                     got, np.intersect1d(new_lists[a], new_lists[b]))
-            print(f"refresh v{v}: {len(new_lists)} lists / {n_sym} symbols "
-                  f"rebuilt + swapped in {dt:.2f}s, serving verified")
+            print(f"refresh v{v}: +{added} docs -> {len(new_lists)} lists "
+                  f"/ {n_sym} symbols rebuilt + swapped in {dt:.2f}s, "
+                  f"serving verified")
+
+    # streaming ingestion (DESIGN.md §12): documents insert one at a time
+    # through the segmented log-structured index — immediately visible,
+    # flushed into immutable Re-Pair segments past the delta budget,
+    # background-compacted by the scheduler — while every round's answers
+    # are held bit-identical to a rebuild-from-scratch oracle
+    if ingest_rate:
+        import os
+        from ..query import naive_eval, rank_oracle
+        from ..query.parser import parse
+
+        cvocab = 96
+        isrc = PostingsSource(base_docs=48, growth_docs=16, vocab=cvocab,
+                              mean_doc_len=16, seed=seed)
+        # coverage head doc (every term) pins global term id == dense
+        # list index on both the segmented and the rebuilt side
+        docs = [np.arange(cvocab, dtype=np.int64)]
+        docs += [isrc.doc_terms(d) for d in range(47 + 6 * ingest_rate)]
+
+        def inv_of(ds):
+            iv: dict[int, list[int]] = {}
+            for d, terms in enumerate(ds):
+                for t in terms.tolist():
+                    iv.setdefault(int(t), []).append(d)
+            return [np.asarray(iv[t], np.int64) for t in sorted(iv)]
+
+        res2 = bld.build_grammar(inv_of(docs[:48]))
+        srv2 = QueryServer(res2, max_short_len=256, engine=engine,
+                           mesh=mesh, batch_window=batch_window,
+                           codec=codec, store=store,
+                           resident_pages=resident_pages)
+        budget = int(os.environ.get("REPRO_DELTA_BUDGET", "12"))
+        srv2.enable_ingest(delta_budget=budget, compact_fanout=2)
+        qgen = np.random.default_rng(seed + 5)
+        pos, checked = 48, 0
+        t0 = time.perf_counter()
+        for _ in range(6):
+            for _ in range(ingest_rate):
+                srv2.insert(docs[pos])
+                pos += 1
+            lists2, n2 = inv_of(docs[:pos]), pos
+            ts = sorted(qgen.choice(cvocab, 3, replace=False).tolist())
+            qs = [f"{ts[0]} AND {ts[1]}",
+                  f"({ts[0]} AND {ts[1]}) OR NOT {ts[2]}"]
+            for qstr, got in zip(qs, srv2.search_many(qs)):
+                np.testing.assert_array_equal(
+                    got, naive_eval(parse(qstr, None), lists2, n2))
+            rr = srv2.search_topk(ts, 10)
+            od, osc = rank_oracle(lists2, n2, ts, 10)
+            np.testing.assert_array_equal(rr.docs, od)
+            np.testing.assert_array_equal(rr.scores, osc)
+            checked += len(qs) + 1
+        dt = time.perf_counter() - t0
+        st = srv2.serve_stats()
+        print(f"ingest: {pos - 48} docs streamed ({ingest_rate}/round, "
+              f"delta budget {budget}) interleaved with {checked} "
+              f"verified queries in {dt:.2f}s")
+        print(f"  segments {st['segments']}, delta_docs {st['delta_docs']}"
+              f", flushes {st['flushes']} ({st['flush_ms']:.1f} ms), "
+              f"compactions {st['compactions']}")
+        print("ingest gate OK: interleaved insert/search == "
+              "rebuild-from-scratch (boolean + top-k, exact scores)")
 
 
 def serve_lm(arch_name: str, n_requests: int) -> None:
@@ -256,6 +345,19 @@ def main() -> None:
     ap.add_argument("--resident-pages", type=int, default=None,
                     help="admission-cache budget in pages (default: all "
                          "pages, or REPRO_RESIDENT_PAGES)")
+    ap.add_argument("--ingest-rate", type=int, default=0,
+                    help="stream this many inserted docs per round "
+                         "through the segmented index (DESIGN.md §12), "
+                         "interleaved with oracle-verified boolean + "
+                         "top-k queries (0 = skip)")
+    ap.add_argument("--num-docs", type=int, default=2000,
+                    help="base collection size served at launch")
+    ap.add_argument("--vocab", type=int, default=4000,
+                    help="corpus vocabulary size")
+    ap.add_argument("--growth-docs", type=int, default=500,
+                    help="documents each --refresh version adds")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="corpus seed (the PostingsSource key)")
     args = ap.parse_args()
     if args.tier == "queries":
         serve_queries(args.n, args.engine, data_shards=args.data_shards,
@@ -263,7 +365,10 @@ def main() -> None:
                       query=args.query, concurrency=args.concurrency,
                       topk=args.topk, batch_window=args.batch_window,
                       codec=args.codec, store=args.store,
-                      resident_pages=args.resident_pages)
+                      resident_pages=args.resident_pages,
+                      ingest_rate=args.ingest_rate,
+                      num_docs=args.num_docs, vocab=args.vocab,
+                      growth_docs=args.growth_docs, seed=args.seed)
     else:
         serve_lm(args.arch, args.n)
 

@@ -55,6 +55,11 @@ class ProbeRound:
     list_ids: np.ndarray              # (Q,) int32 list ids
     xs: np.ndarray                    # (Q,) int32 probe values
     algo: str = "svs"                 # "svs" | "bys"
+    #: route this round to a specific engine instead of the driver's
+    #: default — the segmented index (DESIGN.md §12) tags every round
+    #: with its segment's engine so multi-segment queries coalesce per
+    #: (engine, algo) in the scheduler like any other traffic
+    engine: object | None = None
 
     @property
     def size(self) -> int:
@@ -72,6 +77,9 @@ class ScoreRound:
     of all in-flight ranked queries into one merged decode dispatch."""
 
     entries: np.ndarray               # (Q,) int32 page-entry ids
+    #: per-segment engine override, as on :class:`ProbeRound` — entry ids
+    #: address THAT engine's block-max directory
+    engine: object | None = None
 
     @property
     def size(self) -> int:
@@ -147,10 +155,11 @@ def drive(machine, engine) -> np.ndarray:
         step = next(machine)
         while True:
             if isinstance(step, ProbeRound):
-                res = engine.dispatch_round(step.list_ids, step.xs,
-                                            step.algo)
+                eng = step.engine if step.engine is not None else engine
+                res = eng.dispatch_round(step.list_ids, step.xs, step.algo)
             elif isinstance(step, ScoreRound):
-                res = engine.dispatch_score_round(step.entries)
+                eng = step.engine if step.engine is not None else engine
+                res = eng.dispatch_score_round(step.entries)
             elif isinstance(step, DecodeList):
                 res = engine.decode_list(step.t)
             else:

@@ -105,6 +105,7 @@ class QueryServer:
         self._engine_kwargs = kwargs
         self._batch_window = batch_window
         self._scheduler: QueryScheduler | None = None
+        self._segmented = None
         self.version = -1               # first swap_index brings it to 0
         self.swap_index(res)
 
@@ -122,6 +123,10 @@ class QueryServer:
         engine.index_version = self.version
         self.res, self.engine, self._fi = res, engine, fi
         self._executor = None   # planner stats are per-index
+        # a segmented manager wraps the OLD engine as its base segment —
+        # a full-index swap supersedes it (call enable_ingest again to
+        # resume streaming on the new index)
+        self._segmented = None
         if self._scheduler is not None:
             self._scheduler.swap(engine, self.version)
 
@@ -211,6 +216,63 @@ class QueryServer:
         one-entry scheduler tick, so single queries and coalesced batches
         share one execution path."""
         return self.scheduler.search_many([q], force_algo)[0]
+
+    # -- streaming ingestion (DESIGN.md §12) ---------------------------------
+
+    def _segment_engine(self, res: RePairResult) -> Engine:
+        """Engine factory for flushed/compacted segments: the SAME
+        backend and construction knobs as the serving engine (codec tier,
+        page size, mesh, out-of-core store), so every segment gets its
+        own decode LRU and — out of core — its own page store + resident
+        pool, extending the per-store admission-cache design
+        (DESIGN.md §11) across the segment set."""
+        return make_engine(self._engine_name, res, **self._engine_kwargs)
+
+    def enable_ingest(self, *, delta_budget: int | None = None,
+                      builder: str | Builder = "host",
+                      build_cfg: BuildConfig | None = None,
+                      compact_fanout: int | None = None):
+        """Attach a segmented log-structured index over the live engine
+        and route queries through it: ``insert(doc)`` becomes visible to
+        the next submitted query, the delta flushes into immutable
+        Re-Pair segments past ``delta_budget`` documents
+        (``REPRO_DELTA_BUDGET``), and the scheduler runs one generational
+        compaction step per tick in the background.  Idempotent; a
+        subsequent ``swap_index``/``rebuild`` detaches it."""
+        if self._segmented is None:
+            from ..segment import SegmentedIndex
+            self._segmented = SegmentedIndex(
+                self.res, self.engine, self._segment_engine,
+                builder=builder, build_cfg=build_cfg,
+                delta_budget=delta_budget, compact_fanout=compact_fanout)
+            self.scheduler.segmented = self._segmented
+        return self._segmented
+
+    @property
+    def segmented(self):
+        """The attached segment manager, or None outside ingest mode."""
+        return self._segmented
+
+    def insert(self, terms) -> int:
+        """Insert one document (its sorted unique term ids); returns the
+        global doc id.  Enables ingest mode on first use."""
+        if self._segmented is None:
+            self.enable_ingest()
+        return self._segmented.insert(terms)
+
+    def flush(self):
+        """Force the delta tier into an immutable segment now (normally
+        budget-triggered); returns the new segment, or None if empty."""
+        if self._segmented is None:
+            return None
+        return self._segmented.flush()
+
+    def compact(self) -> int:
+        """Run generational compaction to quiescence (normally the
+        scheduler amortizes one step per tick); returns steps merged."""
+        if self._segmented is None:
+            return 0
+        return self._segmented.compact()
 
     # -- ranked retrieval (DESIGN.md §9) -------------------------------------
 

@@ -58,6 +58,7 @@ import numpy as np
 
 from ..core.cache import LRUCache
 from ..query import QueryExecutor
+from ..query.ast import And, Node, Not, Or, Phrase, Term, terms_of
 from ..query.parser import parse
 from ..query.plan import ListStats
 from ..query.steps import DecodeList, ProbeRound, ScoreRound
@@ -71,6 +72,17 @@ DEFAULT_BATCH_WINDOW = int(os.environ.get("REPRO_BATCH_WINDOW", "32"))
 #: widths) is kept over a sliding window so a long-lived server's
 #: bookkeeping stays bounded; cumulative counts are separate integers
 TELEMETRY_WINDOW = 65536
+
+
+def _term_bag(q) -> list[int]:
+    """Bag of words of a query in any accepted form (string / AST node /
+    term-id sequence) — the segmented ranked path needs it without a
+    bound executor."""
+    if isinstance(q, str):
+        return terms_of(parse(q, None))
+    if isinstance(q, (And, Or, Not, Phrase, Term)):
+        return terms_of(q)
+    return [int(t) for t in q]
 
 
 class _InFlight:
@@ -132,6 +144,13 @@ class QueryScheduler:
         # not a lifetime average diluted by idle gaps
         self._spans: deque[tuple[float, float]] = deque(
             maxlen=TELEMETRY_WINDOW)
+        #: streaming-ingestion mode (DESIGN.md §12): when a
+        #: :class:`~repro.segment.SegmentedIndex` is attached, queries
+        #: lower through it (delta + per-segment machines, rounds tagged
+        #: with their segment's engine) and ``tick`` runs one background
+        #: compaction step after scattering — never blocking in-flight
+        #: queries, which hold immutable snapshots of the segment set
+        self.segmented = None
         self._bind(engine, version)
 
     # -- index hot-swap ------------------------------------------------------
@@ -147,8 +166,11 @@ class QueryScheduler:
         drop the executors (planner statistics are per-index).  Queries
         already in flight pinned their engine/version at submit time and
         finish on the OLD index — the same queries-in-flight semantics as
-        ``QueryServer.swap_index``."""
+        ``QueryServer.swap_index``.  A segmented manager wraps the OLD
+        engine as its base segment, so a swap drops it (the server
+        re-attaches one if ingest continues on the new index)."""
         self._bind(engine, version)
+        self.segmented = None
         self.decode_cache.flush()
         self.result_cache.flush()
 
@@ -171,6 +193,22 @@ class QueryScheduler:
         qid = self._next_qid
         self._next_qid += 1
         t0 = time.perf_counter()
+        if self.segmented is not None:
+            # segmented mode: the machine snapshots delta + segments at
+            # submit; the key folds in the CONTENT epoch (one per insert —
+            # flush/compaction reorganize without changing answers, so
+            # cached results survive them)
+            node = parse(q, None) if isinstance(q, str) else q
+            key = (self._version, "bool-seg", self.segmented.epoch,
+                   force_algo, node)
+            hit = self.result_cache.get(key)
+            if hit is not None:
+                self._finish(qid, hit.copy(), t0)
+                return qid
+            fl = _InFlight(qid, self.segmented.lower_bool(node, force_algo),
+                           self._engine, self._version, key, t0)
+            self._queue.append(fl)
+            return fl.qid
         ex = self._executor(force_algo)
         node = parse(q, ex.term_map) if isinstance(q, str) else q
         key = (self._version, "bool", force_algo, node)
@@ -193,6 +231,22 @@ class QueryScheduler:
         qid = self._next_qid
         self._next_qid += 1
         t0 = time.perf_counter()
+        if self.segmented is not None:
+            terms = tuple(sorted({int(t) for t in _term_bag(q)
+                                  if 0 <= int(t)
+                                  < self.segmented.num_terms}))
+            key = (self._version, "topk-seg", self.segmented.epoch,
+                   terms, int(k), bool(prune))
+            hit = self.result_cache.get(key)
+            if hit is not None:
+                self._finish(qid, hit.copy(), t0)
+                return qid
+            fl = _InFlight(qid,
+                           self.segmented.lower_topk(terms, int(k),
+                                                     prune=prune),
+                           self._engine, self._version, key, t0)
+            self._queue.append(fl)
+            return fl.qid
         terms = tuple(self._executor(None).query_terms(q))
         key = (self._version, "topk", terms, int(k), bool(prune))
         hit = self.result_cache.get(key)
@@ -219,19 +273,26 @@ class QueryScheduler:
             fl = self._queue.popleft()
             self._running.append(fl)
             self._advance(fl, None, start=True)
-        groups: dict[tuple, list[_InFlight]] = {}
+        # a round may carry its own engine (segmented execution tags every
+        # round with its segment's engine, DESIGN.md §12) — resolve it per
+        # round, so the coalescing key stays (engine, algo) and rounds of
+        # the SAME segment merge across queries while distinct segments
+        # dispatch separately
+        groups: dict[tuple, tuple[object, list[_InFlight]]] = {}
         for fl in self._running:
             if fl.pending is not None:
+                eng = (fl.pending.engine if fl.pending.engine is not None
+                       else fl.engine)
                 tag = (("score",) if isinstance(fl.pending, ScoreRound)
                        else ("probe", fl.pending.algo))
-                groups.setdefault((id(fl.engine),) + tag, []).append(fl)
+                groups.setdefault((id(eng),) + tag,
+                                  (eng, []))[1].append(fl)
         # fault the tick's page working set BETWEEN rounds: one batched
         # store gather per engine per tick covering every merged group, so
         # the dispatches below run against an already-hot resident pool
         # and the kernel launch shapes stay deterministic (DESIGN.md §11.3)
         faulting: dict[int, tuple[object, list, list]] = {}
-        for gkey, fls in groups.items():
-            eng = fls[0].engine
+        for gkey, (eng, fls) in groups.items():
             if getattr(eng, "resident", None) is None:
                 continue
             probes, scores = faulting.setdefault(
@@ -246,22 +307,20 @@ class QueryScheduler:
             eng.prefault(probes,
                          np.concatenate(scores) if scores else None)
         first_err: BaseException | None = None
-        for gkey, fls in groups.items():
+        for gkey, (eng, fls) in groups.items():
             rounds = [fl.pending for fl in fls]
             self._dispatch_widths.append(len(fls))
             self._dispatches += 1
             if gkey[1] == "score":      # merged ranked page decode
                 entries = np.concatenate([r.entries for r in rounds])
                 self._merged_lanes += int(entries.size)
-                vals = np.asarray(
-                    fls[0].engine.dispatch_score_round(entries))
+                vals = np.asarray(eng.dispatch_score_round(entries))
             else:
                 algo = gkey[2]
                 lids = np.concatenate([r.list_ids for r in rounds])
                 xs = np.concatenate([r.xs for r in rounds])
                 self._merged_lanes += int(lids.size)
-                vals = np.asarray(
-                    fls[0].engine.dispatch_round(lids, xs, algo))
+                vals = np.asarray(eng.dispatch_round(lids, xs, algo))
             off = 0
             for fl, r in zip(fls, rounds):
                 seg = vals[off:off + r.size]
@@ -280,6 +339,11 @@ class QueryScheduler:
         self._running = [fl for fl in self._running if not fl.done]
         if first_err is not None:
             raise first_err
+        # background merge BETWEEN rounds: at most one generational
+        # compaction step per tick; queries in flight hold immutable
+        # segment-set snapshots, so this never blocks or perturbs them
+        if self.segmented is not None:
+            self.segmented.maybe_compact()
         return len(self._running) + len(self._queue)
 
     def _advance(self, fl: _InFlight, value, *, start: bool = False) -> None:
@@ -422,14 +486,22 @@ class QueryScheduler:
         spans = list(self._spans)
         # windowed throughput: completions / (first submit -> last
         # completion) over the telemetry window, so idle gaps between
-        # bursts do not dilute the number
-        elapsed = (spans[-1][1] - spans[0][0]) if spans else 0.0
+        # bursts do not dilute the number.  A single completion carries no
+        # rate information (its span is just its own latency — for a
+        # cached hit, microseconds, which once divided by reported
+        # absurd qps) — so qps is defined only from two completions up,
+        # and a degenerate elapsed guards the division.
+        if len(spans) >= 2:
+            elapsed = spans[-1][1] - spans[0][0]
+            qps = (len(spans) / elapsed) if elapsed > 1e-9 else 0.0
+        else:
+            qps = 0.0
         return {
             "completed": self._completed,
             "failures": self.failures,
             "in_flight": len(self._running) + len(self._queue),
             "batch_window": self.batch_window,
-            "qps": (len(spans) / elapsed) if elapsed > 0 else 0.0,
+            "qps": qps,
             "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else 0.0,
             "p95_ms": float(np.percentile(lat, 95) * 1e3) if lat.size else 0.0,
             "dispatches": self._dispatches,
@@ -453,6 +525,11 @@ class QueryScheduler:
             # out-of-core admission cache (DESIGN.md §11.5): zeros when
             # the live engine serves fully resident
             **self._store_stats(),
+            # streaming-ingestion telemetry (DESIGN.md §12): zeros when no
+            # segmented manager is attached
+            **(self.segmented.telemetry() if self.segmented is not None
+               else {"segments": 0, "delta_docs": 0, "ingested_docs": 0,
+                     "flushes": 0, "flush_ms": 0.0, "compactions": 0}),
         }
 
     def _store_stats(self) -> dict:

@@ -85,6 +85,15 @@ class PageStore:
         self.n_syms = int(n_syms)
         self.meta = dict(meta)
         self.pages_gathered = 0     # lifetime I/O accounting
+        # close-while-serving protocol (DESIGN.md §11.6): readers that
+        # hold long-lived views of the backing arrays (a ResidentSet
+        # pool faulting on demand, hence any StoreResView above it) pin
+        # the store; close() while pinned DEFERS teardown until the last
+        # pin is released, so an in-flight query on a swapped-out index
+        # can never read through a freed mapping / deleted directory
+        self._pins = 0
+        self._close_pending = False
+        self.closed = False
 
     # -- the one read primitive ------------------------------------------
 
@@ -92,6 +101,8 @@ class PageStore:
         """Batched page fetch: ``(syms, sums)`` each ``(n, page_size)``
         int32.  ONE call per fault batch — the admission cache guarantees
         at most one gather per scheduler tick (DESIGN.md §11.3)."""
+        if self.closed:
+            raise RuntimeError("gather on a closed page store")
         pages = np.asarray(pages, np.int64).reshape(-1)
         self.pages_gathered += int(pages.size)
         return (np.asarray(self._syms_pg[pages], np.int32),
@@ -132,7 +143,38 @@ class PageStore:
         return np.where(dense < T, tv[safe] if T else 0,
                         nt + dense - T).astype(np.int64)
 
-    def close(self) -> None:   # subclasses with file handles override
+    # -- lifecycle (close-while-serving) ---------------------------------
+
+    def pin(self) -> None:
+        """Register a long-lived reader of the backing arrays."""
+        self._pins += 1
+
+    def unpin(self) -> None:
+        """Release one pin; a deferred close() fires when the last reader
+        is gone."""
+        self._pins = max(0, self._pins - 1)
+        if self._pins == 0 and self._close_pending and not self.closed:
+            self.closed = True
+            self._teardown()
+
+    @property
+    def pins(self) -> int:
+        return self._pins
+
+    def close(self) -> None:
+        """Release the store's backing resources.  With readers still
+        pinned the close is DEFERRED — recorded, and executed by the last
+        ``unpin()`` — so closing a store out from under an in-flight
+        query (swap + close) is always safe.  Idempotent."""
+        if self.closed:
+            return
+        if self._pins > 0:
+            self._close_pending = True
+            return
+        self.closed = True
+        self._teardown()
+
+    def _teardown(self) -> None:   # subclasses with file handles override
         pass
 
 

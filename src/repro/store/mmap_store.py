@@ -71,6 +71,9 @@ class MmapPageStore(PageStore):
     def disk_bytes(self) -> int:
         return 2 * self.num_pages * self.page_size * 4
 
-    def close(self) -> None:
+    def _teardown(self) -> None:
+        # runs only once every pinned reader has released (PageStore.close
+        # defers otherwise): dropping the memmap references closes the
+        # mappings, then the directory goes away
         self._syms_pg = self._sums_pg = None
         self._finalizer()

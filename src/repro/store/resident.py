@@ -29,6 +29,7 @@ Contract with the dispatch loop (DESIGN.md §11.3):
 from __future__ import annotations
 
 import os
+import weakref
 from collections import OrderedDict, deque
 
 import numpy as np
@@ -58,6 +59,12 @@ def resident_budget(resident_pages, num_pages: int) -> int:
 class ResidentSet:
     def __init__(self, store: PageStore, budget: int | None = None):
         self.store = store
+        # pin the store for this pool's lifetime: a close() racing with
+        # in-flight queries (swap_index then close on the old index)
+        # defers until the pool is released or garbage-collected —
+        # weakref.finalize is exactly-once, so release() and GC compose
+        store.pin()
+        self._pin = weakref.finalize(self, store.unpin)
         self.budget = resident_budget(budget, store.num_pages)
         P = store.page_size
         self.pool_syms = np.zeros((self.budget, P), np.int32)
@@ -194,6 +201,11 @@ class ResidentSet:
                 self._dev["slots"] = jnp.asarray(self.slot_of_page)
                 self._slots_dirty = False
         return self._dev["syms"], self._dev["sums"], self._dev["slots"]
+
+    def release(self) -> None:
+        """Drop this pool's pin on the store explicitly (idempotent); a
+        deferred store close fires here if this was the last reader."""
+        self._pin()
 
     # -- telemetry -------------------------------------------------------
 

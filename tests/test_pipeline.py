@@ -62,3 +62,80 @@ def test_gpipe_matches_sequential_fwd_and_bwd():
         pytest.xfail("gpipe subprocess exceeded 600s "
                      "(CPU-starved multi-device compile on this box)")
     assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr
+
+
+# -- PostingsSource: the append-only versioned feed (DESIGN.md §3.4/§12) --
+
+
+def test_doc_terms_pure_in_seed_and_doc_id():
+    """A document is a pure function of (seed, doc_id): call order,
+    collection size, and cache state must not change it — the invariant
+    the mutation-log replay (segment tier) depends on."""
+    import numpy as np
+    from repro.data.pipeline import PostingsSource
+
+    a = PostingsSource(base_docs=10, growth_docs=5, vocab=150, seed=9)
+    b = PostingsSource(base_docs=999, growth_docs=1, vocab=150, seed=9)
+    # query b out of order and after growing its cache far past a's
+    b.docs_between(0, 60)
+    for d in (57, 3, 31, 0, 12):
+        np.testing.assert_array_equal(a.doc_terms(d), b.doc_terms(d))
+        t = a.doc_terms(d)
+        assert t.size > 0 and (np.diff(t) > 0).all()   # sorted unique
+        assert t[-1] < 150
+    # a different seed produces a different stream
+    c = PostingsSource(base_docs=10, growth_docs=5, vocab=150, seed=10)
+    assert any(not np.array_equal(a.doc_terms(d), c.doc_terms(d))
+               for d in range(10))
+
+
+def test_deltas_at_partition_the_corpus():
+    """deltas_at(v) is exactly the docs_between slice the version adds;
+    concatenating deltas 0..v reproduces the full corpus at v."""
+    import numpy as np
+    from repro.data.pipeline import PostingsSource
+
+    src = PostingsSource(base_docs=12, growth_docs=7, vocab=120, seed=4)
+    assert len(src.deltas_at(0)) == 12
+    for v in (1, 2, 3):
+        delta = src.deltas_at(v)
+        assert len(delta) == 7
+        lo = src.num_docs_at(v - 1)
+        for got, want in zip(delta, src.docs_between(lo, lo + 7)):
+            np.testing.assert_array_equal(got, want)
+    full = src.docs_between(0, src.num_docs_at(3))
+    cat = [d for v in range(4) for d in src.deltas_at(v)]
+    assert len(cat) == len(full)
+    for got, want in zip(cat, full):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_lists_at_append_only_growth():
+    """Snapshot v extends snapshot v-1: every term's postings at v-1 are
+    a prefix of its postings at v, and the term universe only widens."""
+    import numpy as np
+    from repro.data.pipeline import PostingsSource
+
+    src = PostingsSource(base_docs=40, growth_docs=25, vocab=200, seed=6)
+
+    def by_term(version):
+        docs = src.docs_between(0, src.num_docs_at(version))
+        inv = {}
+        for d, terms in enumerate(docs):
+            for t in terms.tolist():
+                inv.setdefault(int(t), []).append(d)
+        return inv
+
+    prev = by_term(0)
+    lists0, n0 = src.lists_at(0)
+    assert n0 == 40 and len(lists0) == len(prev)
+    for v in (1, 2):
+        cur = by_term(v)
+        assert set(prev) <= set(cur)           # universe only widens
+        for t, plist in prev.items():
+            assert cur[t][:len(plist)] == plist    # strict prefix growth
+        lists, n = src.lists_at(v)
+        assert n == src.num_docs_at(v) and len(lists) == len(cur)
+        for arr, t in zip(lists, sorted(cur)):
+            np.testing.assert_array_equal(arr, np.asarray(cur[t]))
+        prev = cur

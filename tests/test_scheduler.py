@@ -336,3 +336,24 @@ def test_intra_query_or_coalescing(slists, sres, sengines):
                                   naive_eval(node, slists, sres.universe))
     # the two branches' first probe rounds merged: >= 2 lists in one round
     assert max(merged, default=0) >= 2
+
+
+def test_windowed_qps_edge_cases(slists, sres, sengines):
+    """Regression: the windowed qps must be 0.0 (not inf/absurd) with
+    zero or one recorded completion — a single instantly-served cached
+    hit used to divide a count by a ~0 span."""
+    sch = QueryScheduler(sengines["host"], batch_window=4)
+    assert sch.stats()["qps"] == 0.0          # no completions yet
+    sch.search_many([Term(0)])                # one completion
+    assert sch.stats()["qps"] == 0.0          # one span: still undefined
+    sch.search_many([Term(0)])                # cached hit, instant span
+    q = sch.stats()["qps"]
+    assert np.isfinite(q) and q >= 0.0
+    # pinned windowed math: 2 completions over [0.0, 2.0] -> 1.0 qps
+    sch._spans.clear()
+    sch._spans.extend([(0.0, 0.5), (1.0, 2.0)])
+    assert sch.stats()["qps"] == pytest.approx(1.0)
+    # degenerate: both completions at the same instant -> 0.0, not inf
+    sch._spans.clear()
+    sch._spans.extend([(5.0, 5.0), (5.0, 5.0)])
+    assert sch.stats()["qps"] == 0.0

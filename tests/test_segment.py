@@ -1,0 +1,312 @@
+"""Streaming ingestion differential gate (DESIGN.md §12).
+
+The ROADMAP's gate, held at every step: **interleaved insert/search must
+be bit-identical to rebuild-from-scratch** — boolean answers equal the
+numpy set oracle over the full current corpus, ranked top-k answers equal
+``rank_oracle`` exactly (scores AND order), on every engine configuration
+(host / jnp flat / jnp paged / pallas interpret) and on a 1-device-mesh
+shard_map dispatch, with flushes and background compactions landing
+between the checks.
+
+Plus the crash/restart semantics of the satellite checklist: the delta
+tier replays from the one-integer mutation-log cursor, a killed flush
+leaves the previous segment set serving, and compaction replay converges
+to the same segment layout (idempotence).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.build import make_builder
+from repro.data.pipeline import PostingsSource
+from repro.engine import make_engine
+from repro.query import naive_eval
+from repro.query.ast import And, Not, Or, Term
+from repro.query.parser import parse
+from repro.query.steps import ProbeRound, ScoreRound
+from repro.query.topk import rank_oracle
+from repro.segment import DELTA_BUDGET_ENV, SegmentedIndex
+from repro.serve.query_serve import QueryServer
+
+SEED = int(os.environ.get("REPRO_BENCH_SEED", "0"))
+VOCAB = 64
+
+ENGINE_CONFIGS = {
+    "host": {},
+    "jnp": {"max_short_len": 64},
+    "jnp_paged": {"max_short_len": 64, "paged": True, "page_size": 128},
+    "pallas": {"max_short_len": 64, "interpret": True},
+}
+
+
+def _corpus(n, seed=SEED):
+    """Coverage corpus: doc 0 holds every term, so global term id ==
+    dense list index and the rebuilt-from-scratch universe equals the
+    doc count on both sides of the gate."""
+    src = PostingsSource(base_docs=16, growth_docs=8, vocab=VOCAB,
+                        mean_doc_len=12, seed=seed + 17)
+    return [np.arange(VOCAB, dtype=np.int64)] + \
+        [src.doc_terms(d) for d in range(n - 1)]
+
+
+def _invert(docs):
+    inv = {}
+    for d, terms in enumerate(docs):
+        for t in terms.tolist():
+            inv.setdefault(int(t), []).append(d)
+    return [np.asarray(inv[t], np.int64) for t in sorted(inv)]
+
+
+def _queries(rng):
+    a, b, c = (int(t) for t in rng.choice(VOCAB, 3, replace=False))
+    return [And((Term(a), Term(b))),
+            Or((Term(a), Not(Term(c)))),
+            And((Term(a), Not(And((Term(b), Term(c))))))]
+
+
+def _engine_name(name):
+    return "jnp" if name == "jnp_paged" else name
+
+
+def _server(res, name, **extra):
+    kw = dict(ENGINE_CONFIGS[name])
+    kw.pop("max_short_len", None)
+    return QueryServer(res, max_short_len=64, engine=_engine_name(name),
+                       **kw, **extra)
+
+
+# -- the interleaved ≡ rebuild gate, all engines -----------------------------
+
+@pytest.mark.parametrize("name", sorted(ENGINE_CONFIGS))
+def test_interleaved_equals_rebuild_every_step(name):
+    docs = _corpus(56)
+    bld = make_builder("host")
+    srv = _server(res=bld.build_grammar(_invert(docs[:24])), name=name)
+    srv.enable_ingest(delta_budget=6, compact_fanout=2)
+    rng = np.random.default_rng(SEED + 1)
+    for i, d in enumerate(docs[24:]):
+        srv.insert(d)
+        cur = docs[:25 + i]
+        lists, n = _invert(cur), len(cur)
+        qs = _queries(rng)
+        for q, got in zip(qs, srv.search_many(qs)):
+            np.testing.assert_array_equal(got, naive_eval(q, lists, n))
+        ts = sorted(int(t) for t in rng.choice(VOCAB, 4, replace=False))
+        rr = srv.search_topk(ts, 10)
+        od, osc = rank_oracle(lists, n, ts, 10)
+        np.testing.assert_array_equal(rr.docs, od)
+        np.testing.assert_array_equal(rr.scores, osc)
+    st = srv.serve_stats()
+    assert st["flushes"] >= 3 and st["segments"] >= 2, st
+    assert st["compactions"] >= 1, st       # background merges ran
+    assert st["ingested_docs"] == 32, st
+
+
+def test_interleaved_equals_rebuild_sharded():
+    """Same gate through the 1-device-mesh shard_map dispatch."""
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    docs = _corpus(40)
+    bld = make_builder("host")
+    srv = _server(res=bld.build_grammar(_invert(docs[:28])), name="jnp",
+                  mesh=mesh)
+    srv.enable_ingest(delta_budget=5, compact_fanout=2)
+    rng = np.random.default_rng(SEED + 2)
+    for i, d in enumerate(docs[28:]):
+        srv.insert(d)
+        cur = docs[:29 + i]
+        lists, n = _invert(cur), len(cur)
+        qs = _queries(rng)
+        for q, got in zip(qs, srv.search_many(qs)):
+            np.testing.assert_array_equal(got, naive_eval(q, lists, n))
+        ts = sorted(int(t) for t in rng.choice(VOCAB, 3, replace=False))
+        rr = srv.search_topk(ts, 8)
+        od, osc = rank_oracle(lists, n, ts, 8)
+        np.testing.assert_array_equal(rr.docs, od)
+        np.testing.assert_array_equal(rr.scores, osc)
+
+
+def test_result_cache_correct_across_inserts():
+    """Result keys fold in the content epoch: an insert must invalidate,
+    a flush/compaction (content-preserving) must NOT."""
+    docs = _corpus(32)
+    bld = make_builder("host")
+    srv = _server(res=bld.build_grammar(_invert(docs[:24])), name="host")
+    srv.enable_ingest(delta_budget=100, compact_fanout=2)
+    q = "(0 AND 1) OR NOT 2"
+    node = parse(q, None)
+    srv.insert(docs[24])
+    first = srv.search(q)
+    h0 = srv.serve_stats()["result_cache"]["hits"]
+    np.testing.assert_array_equal(srv.search(q), first)
+    assert srv.serve_stats()["result_cache"]["hits"] == h0 + 1
+    # flush reorganizes without changing content: still a cache hit
+    srv.flush()
+    np.testing.assert_array_equal(srv.search(q), first)
+    assert srv.serve_stats()["result_cache"]["hits"] == h0 + 2
+    # an insert changes content: the stale entry must not serve
+    srv.insert(docs[25])
+    lists, n = _invert(docs[:26]), 26
+    np.testing.assert_array_equal(srv.search(q),
+                                  naive_eval(node, lists, n))
+
+
+# -- crash/restart semantics -------------------------------------------------
+
+def _drive(machine):
+    try:
+        step = next(machine)
+        while True:
+            if isinstance(step, ProbeRound):
+                r = step.engine.dispatch_round(step.list_ids, step.xs,
+                                               step.algo)
+            elif isinstance(step, ScoreRound):
+                r = step.engine.dispatch_score_round(step.entries)
+            else:
+                r = step.run()
+            step = machine.send(r)
+    except StopIteration as s:
+        return s.value
+
+
+def _manager(docs, n_base, **kw):
+    bld = make_builder("host")
+    res = bld.build_grammar(_invert(docs[:n_base]))
+    eng = make_engine("host", res)
+    return SegmentedIndex(res, eng, lambda r: make_engine("host", r),
+                          builder="host", **kw)
+
+
+def test_delta_replays_from_cursor():
+    """The delta tier is a pure function of the mutation log past the
+    one-integer cursor (the ``PipelineCursor`` contract): replaying it
+    into a fresh manager reproduces the answers exactly."""
+    docs = _corpus(40)
+    seg = _manager(docs, 20, delta_budget=8)
+    for d in docs[20:]:
+        seg.insert(d)
+    assert seg.delta_docs > 0          # a live (unflushed) tail exists
+    # "restart": fresh manager over the same base, replay log[cursor0:]
+    replay = _manager(docs, 20, delta_budget=10_000)   # no auto-flush
+    for i in range(len(docs) - 20):
+        replay.insert(seg.log_entry(i))
+    assert replay.delta_docs == len(docs) - 20
+    rng = np.random.default_rng(SEED + 3)
+    lists, n = _invert(docs), len(docs)
+    for q in _queries(rng):
+        want = naive_eval(q, lists, n)
+        np.testing.assert_array_equal(_drive(seg.lower_bool(q)), want)
+        np.testing.assert_array_equal(_drive(replay.lower_bool(q)), want)
+    ts = sorted(int(t) for t in rng.choice(VOCAB, 4, replace=False))
+    a, b = _drive(seg.lower_topk(ts, 10)), _drive(replay.lower_topk(ts, 10))
+    np.testing.assert_array_equal(a.docs, b.docs)
+    np.testing.assert_array_equal(a.scores, b.scores)
+
+
+class _KilledFlush(RuntimeError):
+    pass
+
+
+def test_flush_is_atomic_under_crash():
+    """A flush killed mid-build (builder raises) must leave the previous
+    (segments, cursor) pair serving — nothing half-committed — and a
+    retry must succeed from the intact log."""
+    docs = _corpus(36)
+    seg = _manager(docs, 20, delta_budget=10_000)
+    for d in docs[20:]:
+        seg.insert(d)
+    segs0, cursor0, delta0 = seg.segments, seg.cursor, seg.delta_docs
+
+    class _Bomb:
+        def build_grammar(self, lists):
+            raise _KilledFlush("killed mid-flush")
+    good_builder, seg._builder = seg._builder, _Bomb()
+    with pytest.raises(_KilledFlush):
+        seg.flush()
+    # previous state still serving, bit-for-bit
+    assert seg.segments is segs0
+    assert seg.cursor == cursor0 and seg.delta_docs == delta0
+    rng = np.random.default_rng(SEED + 4)
+    lists, n = _invert(docs), len(docs)
+    for q in _queries(rng):
+        np.testing.assert_array_equal(_drive(seg.lower_bool(q)),
+                                      naive_eval(q, lists, n))
+    # restart/retry with the real builder: the intact log flushes fully
+    seg._builder = good_builder
+    assert seg.flush() is not None
+    assert seg.delta_docs == 0
+    for q in _queries(np.random.default_rng(SEED + 4)):
+        np.testing.assert_array_equal(_drive(seg.lower_bool(q)),
+                                      naive_eval(q, lists, n))
+
+
+def test_compaction_idempotent_on_replay():
+    """Compaction is a pure function of the immutable segment contents:
+    replaying it on an identical manager converges to the same segment
+    layout (bases, sizes, generations) and the same answers."""
+    def build():
+        docs = _corpus(44)
+        seg = _manager(docs, 16, delta_budget=4, compact_fanout=2)
+        for d in docs[16:]:
+            seg.insert(d)
+        return docs, seg
+    docs, a = build()
+    _, b = build()
+    a.compact()                    # run to quiescence
+    b.compact_step()               # replay: step-at-a-time to quiescence
+    while b.compact_step():
+        pass
+    layout = lambda s: [(x.base, x.num_docs, x.gen) for x in s.segments]
+    assert layout(a) == layout(b)
+    assert a.compact_step() is False      # quiescent: replay is a no-op
+    rng = np.random.default_rng(SEED + 5)
+    lists, n = _invert(docs), len(docs)
+    for q in _queries(rng):
+        want = naive_eval(q, lists, n)
+        np.testing.assert_array_equal(_drive(a.lower_bool(q)), want)
+        np.testing.assert_array_equal(_drive(b.lower_bool(q)), want)
+
+
+# -- knobs + telemetry -------------------------------------------------------
+
+def test_delta_budget_env(monkeypatch):
+    docs = _corpus(24)
+    monkeypatch.setenv(DELTA_BUDGET_ENV, "3")
+    seg = _manager(docs, 16)
+    assert seg.delta_budget == 3
+    for d in docs[16:24]:
+        seg.insert(d)
+    assert seg.flushes >= 1            # env budget actually triggered
+    assert seg.delta_docs <= 3
+
+
+def test_telemetry_counts():
+    docs = _corpus(40)
+    seg = _manager(docs, 16, delta_budget=4, compact_fanout=2)
+    for d in docs[16:]:
+        seg.insert(d)
+    seg.compact()
+    t = seg.telemetry()
+    assert t["ingested_docs"] == 24
+    assert t["flushes"] >= 2 and t["flush_ms"] > 0
+    assert t["compactions"] >= 1
+    assert t["segments"] == len(seg.segments)
+    assert t["delta_docs"] == seg.delta_docs
+
+
+def test_swap_index_detaches_segmented():
+    """A full-index hot swap supersedes the segment manager (it wrapped
+    the old engine); serving continues on the new index."""
+    docs = _corpus(30)
+    bld = make_builder("host")
+    srv = _server(res=bld.build_grammar(_invert(docs[:24])), name="host")
+    srv.insert(docs[24])
+    assert srv.segmented is not None
+    lists, n = _invert(docs[:26]), 26
+    srv.swap_index(bld.build_grammar(lists))
+    assert srv.segmented is None and srv.scheduler.segmented is None
+    q = And((Term(0), Term(1)))
+    np.testing.assert_array_equal(srv.search(q), naive_eval(q, lists, n))

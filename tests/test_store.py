@@ -385,3 +385,82 @@ def test_scheduler_stats_surface_cache_counters(slists, sres):
     st0 = QueryScheduler(_make_engine("jnp_paged", sres,
                                       store="")).stats()
     assert st0["page_faults"] == 0 and st0["store"] is None
+
+
+# -- close-while-serving lifecycle (DESIGN.md §11.6) ----------------------
+
+
+def test_close_while_pinned_defers_teardown(sres):
+    """Regression: MmapPageStore.close() used to rmtree immediately even
+    while a ResidentSet held open memmaps over the files.  A close with
+    readers pinned must DEFER teardown until the last pin is released."""
+    store = build_page_store(sres, kind="mmap", page_size=PAGE)
+    path = store.path
+    rs = ResidentSet(store, budget=2)
+    assert store.pins == 1
+    store.close()                      # reader still pinned: defer
+    assert not store.closed
+    assert os.path.isdir(path)         # backing files still alive
+    syms, _ = store.gather(np.asarray([0]))
+    assert syms.shape == (1, PAGE)     # reads still served
+    rs.ensure(np.asarray([0]))         # the pool can still fault
+    rs.release()                       # last pin gone: deferred close fires
+    assert store.closed
+    assert not os.path.isdir(path)
+    with pytest.raises(RuntimeError):
+        store.gather(np.asarray([0]))
+    rs.release()                       # both idempotent
+    store.close()
+
+
+def test_close_unpinned_is_immediate(sres):
+    store = build_page_store(sres, kind="mmap", page_size=PAGE)
+    path = store.path
+    store.close()
+    assert store.closed and not os.path.isdir(path)
+
+
+def test_pool_gc_releases_pin(sres):
+    """Dropping the last reference to a ResidentSet releases its pin via
+    the GC finalizer (exactly-once with explicit release())."""
+    import gc
+    store = build_page_store(sres, kind="mmap", page_size=PAGE)
+    rs = ResidentSet(store, budget=2)
+    store.close()
+    assert not store.closed
+    del rs
+    gc.collect()
+    assert store.closed
+
+
+def test_inflight_query_across_swap_and_close(slists, sres):
+    """Regression (the ISSUE's refresh-path bug): swap_index then close()
+    on the OLD index's mmap store while an out-of-core query is still in
+    flight on it.  The teardown defers — the query keeps reading pages
+    through the close-pending store and completes bit-identically; the
+    directory disappears only when the old pool is released."""
+    lists2 = make_lists(np.random.default_rng(SEED + 31), n_lists=30,
+                        universe=4000, min_len=5, max_len=600)
+    srv = QueryServer(sres, max_short_len=64, engine="jnp", paged=True,
+                      page_size=PAGE, store="mmap",
+                      resident_pages=_budget(sres))
+    q = "0 AND 1 AND 2"
+    qid = srv.submit(q)
+    srv.scheduler.tick()                 # in flight, reading store v0
+    old_engine, old_store = srv.engine, srv.engine.store
+    path = old_store.path
+    res2 = repair_compress(lists2)
+    srv.swap_index(res2)
+    old_store.close()                    # retire the old index's disk store
+    assert not old_store.closed          # deferred: in-flight pool pins it
+    assert os.path.isdir(path)
+    srv.scheduler.drain()                # remaining rounds read the store
+    np.testing.assert_array_equal(
+        srv.scheduler.take(qid),
+        naive_eval(srv.plan(q).node, slists, sres.universe))
+    old_engine.resident.release()        # last reader gone
+    assert old_store.closed
+    assert not os.path.isdir(path)
+    # the new index serves on untouched fresh state
+    np.testing.assert_array_equal(
+        srv.search(q), naive_eval(srv.plan(q).node, lists2, res2.universe))
