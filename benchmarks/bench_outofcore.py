@@ -72,42 +72,58 @@ def run(engines=DEFAULT_ENGINES, n_queries=48) -> list[dict]:
         for name in engines:
             if name == "pallas" and ci > 0:
                 continue
-            eng = make_engine(name, res, store="mmap",
-                              resident_pages=budget, page_size=PAGE)
-            # warmup: jit compilation + the correctness gate, and it
-            # brings the pool to steady state for the timed pass
-            warm = QueryScheduler(eng, batch_window=CONCURRENCY,
-                                  result_cache_size=0)
-            for got, want in zip(warm.search_many(queries), oracle):
-                np.testing.assert_array_equal(got, want)
-            sch = QueryScheduler(eng, batch_window=CONCURRENCY,
-                                 result_cache_size=0)
-            t0 = time.perf_counter()
-            sch.search_many(queries)
-            dt = time.perf_counter() - t0
-            st = sch.stats()
-            cache = eng.resident.stats()
-            rows.append({
-                "engine": name,
-                "num_docs": corpus["num_docs"],
-                "n_queries": len(queries),
-                "qps": len(queries) / dt,
-                "p50_ms": st["p50_ms"],
-                "p95_ms": st["p95_ms"],
-                "num_pages": num_pages,
-                "budget_requested": budget,
-                "budget": cache["budget"],
-                "over_budget_ratio": num_pages / cache["budget"],
-                "resident_pages": cache["resident_pages"],
-                "page_faults": cache["page_faults"],
-                "page_evictions": cache["page_evictions"],
-                "fault_bytes": cache["fault_bytes"],
-                "pool_grows": cache["pool_grows"],
-                "fault_rate": cache["page_faults"] / max(1, cache["lookups"]),
-                "hit_rate_window": cache["hit_rate_window"],
-            })
-            emit(rows[-1:], f"{name} × {corpus['num_docs']} docs "
-                            f"({num_pages} pages @ budget {cache['budget']})")
+            # prefetch axis (DESIGN.md §13.3): fresh engine per mode so
+            # the two cells start from identical (cold) pools
+            for prefetch in (True, False):
+                eng = make_engine(name, res, store="mmap",
+                                  resident_pages=budget, page_size=PAGE)
+                # warmup: jit compilation + the correctness gate, and it
+                # brings the pool to steady state for the timed pass
+                warm = QueryScheduler(eng, batch_window=CONCURRENCY,
+                                      result_cache_size=0,
+                                      prefetch=prefetch)
+                for got, want in zip(warm.search_many(queries), oracle):
+                    np.testing.assert_array_equal(got, want)
+                sch = QueryScheduler(eng, batch_window=CONCURRENCY,
+                                     result_cache_size=0,
+                                     prefetch=prefetch)
+                t0 = time.perf_counter()
+                sch.search_many(queries)
+                dt = time.perf_counter() - t0
+                st = sch.stats()
+                cache = eng.resident.stats()
+                rows.append({
+                    "engine": name,
+                    "num_docs": corpus["num_docs"],
+                    "prefetch": prefetch,
+                    "n_queries": len(queries),
+                    "qps": len(queries) / dt,
+                    "p50_ms": st["p50_ms"],
+                    "p95_ms": st["p95_ms"],
+                    "num_pages": num_pages,
+                    "budget_requested": budget,
+                    "budget": cache["budget"],
+                    "over_budget_ratio": num_pages / cache["budget"],
+                    "resident_pages": cache["resident_pages"],
+                    "page_faults": cache["page_faults"],
+                    "page_evictions": cache["page_evictions"],
+                    "fault_bytes": cache["fault_bytes"],
+                    "pool_grows": cache["pool_grows"],
+                    "fault_rate": cache["page_faults"]
+                    / max(1, cache["lookups"]),
+                    "hit_rate_window": cache["hit_rate_window"],
+                    # overlapped-prefetch telemetry (timed pass only):
+                    # overlap_ms is gather time hidden behind dispatch —
+                    # the fault stall the background thread removed
+                    "prefetched_pages": st["prefetched_pages"],
+                    "prefetch_accuracy": st["prefetch_accuracy"],
+                    "prefetch_gather_ms": st["prefetch_gather_ms"],
+                    "overlap_ms": st["overlap_ms"],
+                })
+                emit(rows[-1:],
+                     f"{name} × {corpus['num_docs']} docs "
+                     f"({num_pages} pages @ budget {cache['budget']}, "
+                     f"prefetch={'on' if prefetch else 'off'})")
     return rows
 
 
@@ -118,15 +134,30 @@ def main(engines=DEFAULT_ENGINES, n_queries=48) -> dict:
                for r in rows), "sweep must stay >=10x over budget"
     assert all(r["hit_rate_window"] > 0 for r in rows), \
         "admission cache measured no hits"
+    # overlapped prefetch removed real fault stall at the 10x point, and
+    # speculative admission never grew a pool its OFF twin didn't grow
+    on_rows = [r for r in rows if r["prefetch"]]
+    assert any(r["overlap_ms"] > 0 for r in on_rows), \
+        "prefetch overlapped no gather time"
+    for on in on_rows:
+        off = next(r for r in rows if not r["prefetch"]
+                   and r["engine"] == on["engine"]
+                   and r["num_docs"] == on["num_docs"])
+        assert on["pool_grows"] <= off["pool_grows"], (on, off)
     return {
         "seed": BENCH_SEED,
         "page_size": PAGE,
         "concurrency": CONCURRENCY,
         "corpora": list(CORPORA),
         "rows": rows,
-        "qps": {f"{r['engine']}/{r['num_docs']}d": r["qps"] for r in rows},
-        "hit_rate": {f"{r['engine']}/{r['num_docs']}d":
+        "qps": {f"{r['engine']}/{r['num_docs']}d"
+                f"/{'on' if r['prefetch'] else 'off'}": r["qps"]
+                for r in rows},
+        "hit_rate": {f"{r['engine']}/{r['num_docs']}d"
+                     f"/{'on' if r['prefetch'] else 'off'}":
                      r["hit_rate_window"] for r in rows},
+        "overlap_ms": {f"{r['engine']}/{r['num_docs']}d": r["overlap_ms"]
+                       for r in on_rows},
     }
 
 

@@ -22,12 +22,13 @@ class LRUCache:
     cache being present.
     """
 
-    __slots__ = ("maxsize", "hits", "misses", "_d")
+    __slots__ = ("maxsize", "hits", "misses", "evictions", "_d")
 
     def __init__(self, maxsize: int):
         self.maxsize = int(maxsize)
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         self._d: OrderedDict[Hashable, Any] = OrderedDict()
 
     def __len__(self) -> int:
@@ -52,6 +53,7 @@ class LRUCache:
         self._d[key] = value
         while len(self._d) > self.maxsize:
             self._d.popitem(last=False)
+            self.evictions += 1
 
     def flush(self) -> None:
         """Drop every entry (index hot-swap); counters survive so stats
@@ -59,5 +61,8 @@ class LRUCache:
         self._d.clear()
 
     def stats(self) -> dict:
+        total = self.hits + self.misses
         return {"size": len(self._d), "maxsize": self.maxsize,
-                "hits": self.hits, "misses": self.misses}
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": (self.hits / total) if total else 0.0}

@@ -56,6 +56,23 @@ from ..core.repair import RePairResult
 #: ``REPRO_DECODE_CACHE``; 0 disables caching)
 DECODE_CACHE_SIZE = int(os.environ.get("REPRO_DECODE_CACHE", "512"))
 
+#: entry bound of the per-engine probe memo (DESIGN.md §13.2) — repeat
+#: ``(list, x)`` probes across ticks skip device dispatch entirely.
+#: Env override ``REPRO_PROBE_MEMO``; 0 disables memoization.
+PROBE_MEMO_SIZE = int(os.environ.get("REPRO_PROBE_MEMO", "4096"))
+
+
+def _env_flag(name: str, default: bool = True) -> bool:
+    raw = os.environ.get(name, "").strip().lower()
+    if not raw:
+        return default
+    return raw not in ("0", "off", "false", "no")
+
+
+#: cross-query lane dedup in merged rounds (DESIGN.md §13.1); env
+#: override ``REPRO_DEDUP=0`` restores the PR 5 dispatch-every-lane path
+DEDUP_ENABLED = _env_flag("REPRO_DEDUP", True)
+
 
 class Engine(abc.ABC):
     """Backend-pluggable query engine over one Re-Pair compressed index."""
@@ -111,6 +128,27 @@ class Engine(abc.ABC):
         self._ef_sel = LRUCache(DECODE_CACHE_SIZE)
         #: per-codec sub-dispatch telemetry, surfaced by the scheduler
         self.codec_dispatches = {"repair": 0, "ef": 0, "bitmap": 0}
+        #: cross-query lane dedup toggle (DESIGN.md §13.1) — resolved
+        #: from ``REPRO_DEDUP`` at construction; tests flip it per-engine
+        self.dedup = DEDUP_ENABLED
+        #: bounded probe memo keyed ``(index_version, memo_epoch, algo,
+        #: list_id, x)`` (DESIGN.md §13.2).  The codec is implied by
+        #: ``list_id`` — one tier per engine, assignment fixed at build.
+        #: ``swap_index`` builds a FRESH engine per swap, so the memo is
+        #: structurally flushed on every hot swap; ``memo_epoch`` is the
+        #: fold point for any future tier that mutates list content under
+        #: one engine instance (today's segment engines are immutable).
+        self._probe_memo = LRUCache(PROBE_MEMO_SIZE)
+        self.memo_epoch = 0
+        #: cumulative merged-round lane accounting (DESIGN.md §13.4);
+        #: the scheduler snapshots deltas around each dispatch
+        self.lane_stats = {"real_lanes": 0, "unique_lanes": 0,
+                           "pad_lanes": 0, "dispatched_lanes": 0,
+                           "memo_hits": 0, "memo_misses": 0}
+        #: True while inside a merged-round dispatch — scopes the device
+        #: engines' pad-lane accounting to the round path (point APIs
+        #: like ``member_batch`` pad too but aren't merged-round work)
+        self._in_round = False
 
     # -- point operations ---------------------------------------------------
 
@@ -208,6 +246,16 @@ class Engine(abc.ABC):
         into one ``store.gather``."""
         if self.resident is None:
             return
+        pages = self.working_set(probes, score_entries)
+        if pages.size:
+            self.resident.ensure(pages)
+
+    def working_set(self, probes=(), score_entries=None) -> np.ndarray:
+        """The union page working set of one tick's merged rounds —
+        ``prefault``'s page computation, reused by the scheduler's
+        overlapped-prefetch predictor (DESIGN.md §13.3)."""
+        if self.resident is None:
+            return np.empty(0, np.int64)
         groups = []
         for lids, xq in probes:
             lids = np.asarray(lids, np.int64).ravel()
@@ -222,8 +270,28 @@ class Engine(abc.ABC):
             if e.size:
                 groups.append(self._score_pages(e))
         groups = [g for g in groups if g.size]
-        if groups:
-            self.resident.ensure(np.concatenate(groups))
+        if not groups:
+            return np.empty(0, np.int64)
+        return np.unique(np.concatenate(groups))
+
+    def span_pages(self, term_ids) -> np.ndarray:
+        """Pages covering the FULL stream spans of ``term_ids`` — the
+        prefetch predictor's superset for machines whose next probe
+        values aren't known yet (queued first rounds, continuation
+        re-probes of the same lists).  Non-repair lanes never touch the
+        stream pool, so tiered engines keep only repair-coded lists."""
+        if self.resident is None:
+            return np.empty(0, np.int64)
+        from ..store import pages_in_spans
+        u = np.unique(np.asarray(list(term_ids), np.int64).ravel())
+        u = u[(u >= 0) & (u < self.lengths.size)]
+        if self.tier is not None and u.size:
+            u = u[self.tier.codec[u] == 0]
+        if u.size == 0:
+            return np.empty(0, np.int64)
+        starts = self.store.meta["starts"]
+        return pages_in_spans(starts[u], starts[u + 1],
+                              self.store.page_size)
 
     def _probe_pages(self, lids: np.ndarray, xq: np.ndarray) -> np.ndarray:
         """Pages one merged probe round can touch.  Host granularity is
@@ -261,15 +329,73 @@ class Engine(abc.ABC):
         engines pad every sub-round to a power-of-two bucket
         (DESIGN.md §8.2) so arbitrary merged sizes reuse O(log Q) jit
         entries; the host tier dispatches unpadded — its loop would pay
-        for the dead lanes."""
+        for the dead lanes.
+
+        **Hot-path dedup** (DESIGN.md §13): duplicate ``(list_id, x)``
+        lanes — different queries probing the same hot term at the same
+        frontier — collapse to one representative via ``np.unique``'s
+        inverse map before codec routing and padding; results scatter
+        back to every requesting lane, bit-identical by construction.
+        Surviving unique lanes then consult the bounded probe memo; only
+        memo misses reach the device.  A round fully served by the memo
+        skips dispatch entirely."""
         lids = np.asarray(list_ids, np.int32).ravel()
         xq = np.asarray(xs, np.int32).ravel()
-        if lids.size == 0:
+        n = lids.size
+        if n == 0:
             return np.empty(0, dtype=np.int32)
-        if self.tier is None:
-            self.codec_dispatches["repair"] += 1
-            return np.asarray(self._dispatch_codec(0, lids, xq, algo))
-        return self._route_codecs(lids, xq, algo)
+        st = self.lane_stats
+        st["real_lanes"] += n
+        inv = None
+        if self.dedup and n > 1:
+            # (lid, x) -> one int64 key; bijective because list ids are
+            # non-negative int32 and x's 32 bits are masked in whole
+            key = ((lids.astype(np.int64) << 32)
+                   | (xq.astype(np.int64) & 0xFFFFFFFF))
+            _, uidx, inv = np.unique(key, return_index=True,
+                                     return_inverse=True)
+            if uidx.size == n:
+                inv = None           # nothing collapsed — skip the scatter
+            else:
+                lids, xq = lids[uidx], xq[uidx]
+        st["unique_lanes"] += lids.size
+        memo = self._probe_memo
+        if memo.maxsize > 0:
+            ver, ep = self.index_version, self.memo_epoch
+            out = np.empty(lids.size, np.int32)
+            lt, xt = lids.tolist(), xq.tolist()
+            miss = []
+            for j, (li, x) in enumerate(zip(lt, xt)):
+                v = memo.get((ver, ep, algo, li, x))
+                if v is None:
+                    miss.append(j)
+                else:
+                    out[j] = v
+            st["memo_hits"] += lids.size - len(miss)
+            st["memo_misses"] += len(miss)
+            if miss:
+                mi = np.asarray(miss, np.int64)
+                vals = self._dispatch_lanes(lids[mi], xq[mi], algo)
+                out[mi] = vals
+                for j, v in zip(miss, vals.tolist()):
+                    memo.put((ver, ep, algo, lt[j], xt[j]), int(v))
+        else:
+            out = self._dispatch_lanes(lids, xq, algo)
+        return out if inv is None else out[inv]
+
+    def _dispatch_lanes(self, lids: np.ndarray, xq: np.ndarray,
+                        algo: str) -> np.ndarray:
+        """The post-dedup/post-memo slice of a merged round: codec
+        routing + backend dispatch (the whole PR 5 round body)."""
+        self.lane_stats["dispatched_lanes"] += lids.size
+        self._in_round = True
+        try:
+            if self.tier is None:
+                self.codec_dispatches["repair"] += 1
+                return np.asarray(self._dispatch_codec(0, lids, xq, algo))
+            return self._route_codecs(lids, xq, algo)
+        finally:
+            self._in_round = False
 
     def _route_codecs(self, list_ids, xs, algo: str) -> np.ndarray:
         """Split lanes by their list's codec; one sub-dispatch each."""
@@ -398,11 +524,39 @@ class Engine(abc.ABC):
         page-entry lanes of every in-flight ranked query.  Elementwise in
         the entry lanes, so merged dispatches return bit-identical rows;
         device engines pad to the same power-of-two buckets as
-        ``dispatch_round``."""
+        ``dispatch_round``.
+
+        Duplicate entry lanes — several ranked queries scoring the same
+        hot page in one tick — dedup exactly like probe lanes: decode
+        the unique set, scatter rows back via the inverse map
+        (DESIGN.md §13.1).  Page rows are too wide to memoize (the
+        decode LRU already caches at whole-list granularity)."""
         e = np.asarray(entries, np.int32).ravel()
-        if e.size == 0:
+        n = e.size
+        if n == 0:
             return np.empty((0, self.page_elem_bucket()), np.int32)
-        return self.decode_page_batch(e)
+        st = self.lane_stats
+        st["real_lanes"] += n
+        inv = None
+        if self.dedup and n > 1:
+            ue, inv = np.unique(e, return_inverse=True)
+            if ue.size == n:
+                inv = None
+            else:
+                e = ue.astype(np.int32)
+        st["unique_lanes"] += e.size
+        st["dispatched_lanes"] += e.size
+        self._in_round = True
+        try:
+            rows = self._dispatch_score_unique(e)
+        finally:
+            self._in_round = False
+        return rows if inv is None else rows[inv]
+
+    def _dispatch_score_unique(self, entries: np.ndarray) -> np.ndarray:
+        """The post-dedup slice of a merged ScoreRound (host tier:
+        unpadded; the device override pads to the pow2 bucket)."""
+        return self.decode_page_batch(entries)
 
     def score_batch(self, doc_ids: np.ndarray, terms) -> np.ndarray:
         """Exact BM25 scores of ``doc_ids`` for the term bag ``terms``:

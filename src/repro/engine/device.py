@@ -296,6 +296,8 @@ class DeviceEngine(Engine):
         if bucket != n:
             lids = np.pad(lids, (0, bucket - n), mode="edge")
             xq = np.pad(xq, (0, bucket - n), mode="edge")
+        if self._in_round:
+            self.lane_stats["pad_lanes"] += bucket - n
         return np.asarray(super()._dispatch_codec(codec, lids, xq,
                                                   algo))[:n]
 
@@ -478,19 +480,19 @@ class DeviceEngine(Engine):
     #: lower than the probe lanes' — a serial query's chunk fits in one
     SCORE_BUCKET_MIN = 8
 
-    def dispatch_score_round(self, entries: np.ndarray) -> np.ndarray:
-        """Merged ScoreRound with the same power-of-two bucket convention
-        as ``dispatch_round``: pad the entry lanes with the directory's
-        cheapest entry (fewest elements — its decode is real but its
-        guarded tiles all no-op), slice the rows back."""
+    def _dispatch_score_unique(self, entries: np.ndarray) -> np.ndarray:
+        """Merged ScoreRound (post-dedup) with the same power-of-two
+        bucket convention as ``dispatch_round``: pad the entry lanes with
+        the directory's cheapest entry (fewest elements — its decode is
+        real but its guarded tiles all no-op), slice the rows back."""
         e = np.asarray(entries, np.int32).ravel()
         n = e.size
-        if n == 0:
-            return np.empty((0, self.page_elem_bucket()), np.int32)
         bucket = max(self.SCORE_BUCKET_MIN, 1 << (n - 1).bit_length())
         if bucket != n:
             pad_id = int(np.argmin(self.score_index.pg_count))
             e = np.pad(e, (0, bucket - n), constant_values=pad_id)
+            if self._in_round:
+                self.lane_stats["pad_lanes"] += bucket - n
         return self.decode_page_batch(e)[:n]
 
     def decode_page_batch(self, entries: np.ndarray) -> np.ndarray:

@@ -50,6 +50,7 @@ so a mid-workload swap never mixes indexes inside one machine.
 from __future__ import annotations
 
 import os
+import threading
 import time
 from collections import deque
 from typing import Sequence
@@ -57,6 +58,7 @@ from typing import Sequence
 import numpy as np
 
 from ..core.cache import LRUCache
+from ..engine.base import _env_flag
 from ..query import QueryExecutor
 from ..query.ast import And, Node, Not, Or, Phrase, Term, terms_of
 from ..query.parser import parse
@@ -72,6 +74,16 @@ DEFAULT_BATCH_WINDOW = int(os.environ.get("REPRO_BATCH_WINDOW", "32"))
 #: widths) is kept over a sliding window so a long-lived server's
 #: bookkeeping stays bounded; cumulative counts are separate integers
 TELEMETRY_WINDOW = 65536
+
+#: overlapped page prefetch for out-of-core engines (DESIGN.md §13.3);
+#: ``REPRO_PREFETCH=0`` restores the serial fault-then-dispatch tick
+PREFETCH_ENABLED = _env_flag("REPRO_PREFETCH", True)
+
+#: the merged-round lane counters every engine carries — the scheduler
+#: accumulates per-dispatch deltas so totals survive segment-engine
+#: churn and cover every engine a tick touches
+_LANE_KEYS = ("real_lanes", "unique_lanes", "pad_lanes",
+              "dispatched_lanes", "memo_hits", "memo_misses")
 
 
 def _term_bag(q) -> list[int]:
@@ -90,9 +102,10 @@ class _InFlight:
     engine/version it was planned against, and its pending probe round."""
 
     __slots__ = ("qid", "machine", "engine", "version", "key", "t0",
-                 "pending", "rounds", "done")
+                 "pending", "rounds", "done", "terms")
 
-    def __init__(self, qid, machine, engine, version, key, t0):
+    def __init__(self, qid, machine, engine, version, key, t0,
+                 terms=None):
         self.qid = qid
         self.machine = machine
         self.engine = engine
@@ -102,6 +115,9 @@ class _InFlight:
         self.pending: ProbeRound | None = None
         self.rounds = 0
         self.done = False
+        #: term bag captured at submit — the prefetch predictor's page
+        #: superset for machines that haven't yielded a round yet
+        self.terms = terms
 
 
 class QueryScheduler:
@@ -116,7 +132,8 @@ class QueryScheduler:
 
     def __init__(self, engine, *, batch_window: int | None = None,
                  version: int = 0, decode_cache_size: int = 256,
-                 result_cache_size: int = 512):
+                 result_cache_size: int = 512,
+                 prefetch: bool | None = None):
         self.batch_window = max(1, int(batch_window if batch_window
                                        is not None else
                                        DEFAULT_BATCH_WINDOW))
@@ -128,6 +145,24 @@ class QueryScheduler:
         self._dispatch_widths: deque[int] = deque(maxlen=TELEMETRY_WINDOW)
         self._merged_lanes = 0
         self._dispatches = 0
+        # merged-round lane accounting (DESIGN.md §13.4): per-dispatch
+        # deltas of each engine's ``lane_stats`` counters
+        self._lane_totals = dict.fromkeys(_LANE_KEYS, 0)
+        # overlapped prefetch (DESIGN.md §13.3): one background thread per
+        # tick runs the predicted next-tick gather; joined at the top of
+        # the NEXT tick before anything touches the pools
+        self.prefetch = (PREFETCH_ENABLED if prefetch is None
+                         else bool(prefetch))
+        self._pf_thread: threading.Thread | None = None
+        self._pf_jobs: list[tuple[object, np.ndarray]] = []
+        self._pf_results: list = []
+        self._pf_gather_s = 0.0         # written once by the thread,
+        #                                 read after join — no race
+        self.prefetch_gather_ms = 0.0
+        self.prefetch_join_wait_ms = 0.0
+        self.overlap_ms = 0.0
+        self.prefetched_pages = 0
+        self.prefetch_useful = 0
         self._completed = 0
         self.failures = 0
         # ranked-retrieval counters (cumulative; survive hot swaps so a
@@ -206,7 +241,8 @@ class QueryScheduler:
                 self._finish(qid, hit.copy(), t0)
                 return qid
             fl = _InFlight(qid, self.segmented.lower_bool(node, force_algo),
-                           self._engine, self._version, key, t0)
+                           self._engine, self._version, key, t0,
+                           terms=terms_of(node))
             self._queue.append(fl)
             return fl.qid
         ex = self._executor(force_algo)
@@ -217,7 +253,7 @@ class QueryScheduler:
             self._finish(qid, hit.copy(), t0)
             return qid
         fl = _InFlight(qid, ex.lower(ex.plan(node)), self._engine,
-                       self._version, key, t0)
+                       self._version, key, t0, terms=terms_of(node))
         self._queue.append(fl)
         return fl.qid
 
@@ -244,7 +280,8 @@ class QueryScheduler:
             fl = _InFlight(qid,
                            self.segmented.lower_topk(terms, int(k),
                                                      prune=prune),
-                           self._engine, self._version, key, t0)
+                           self._engine, self._version, key, t0,
+                           terms=list(terms))
             self._queue.append(fl)
             return fl.qid
         terms = tuple(self._executor(None).query_terms(q))
@@ -255,7 +292,8 @@ class QueryScheduler:
             return qid
         fl = _InFlight(qid, lower_topk(self._engine.score_index, terms,
                                        int(k), prune=prune),
-                       self._engine, self._version, key, t0)
+                       self._engine, self._version, key, t0,
+                       terms=list(terms))
         self._queue.append(fl)
         return fl.qid
 
@@ -268,7 +306,15 @@ class QueryScheduler:
     def tick(self) -> int:
         """One scheduler round: admit, advance to the next suspension
         point, one merged dispatch per (engine, algorithm), scatter.
-        Returns the number of queries still in flight or queued."""
+        Returns the number of queries still in flight or queued.
+
+        With an out-of-core engine and prefetch on, each tick ALSO
+        predicts the next tick's page working set and runs its store
+        gather on a background thread, double-buffered against this
+        tick's dispatches (DESIGN.md §13.3).  The thread is joined — and
+        its pages admitted — at the top of the next tick, before any
+        code touches the resident pools."""
+        self._join_prefetch()
         while self._queue and len(self._running) < self.batch_window:
             fl = self._queue.popleft()
             self._running.append(fl)
@@ -303,14 +349,23 @@ class QueryScheduler:
                 else:
                     probes.append((np.asarray(r.list_ids),
                                    np.asarray(r.xs)))
+        # harvest prefetch-usefulness deltas over the prefault+dispatch
+        # window: demand hits on speculatively admitted pages
+        pf_res = {}
+        for eng, _p, _s in faulting.values():
+            res = eng.resident
+            pf_res.setdefault(id(res), (res, res.prefetch_useful))
         for eng, probes, scores in faulting.values():
             eng.prefault(probes,
                          np.concatenate(scores) if scores else None)
+        if self.prefetch:
+            self._launch_prefetch(groups)
         first_err: BaseException | None = None
         for gkey, (eng, fls) in groups.items():
             rounds = [fl.pending for fl in fls]
             self._dispatch_widths.append(len(fls))
             self._dispatches += 1
+            lane_snap = dict(eng.lane_stats)
             if gkey[1] == "score":      # merged ranked page decode
                 entries = np.concatenate([r.entries for r in rounds])
                 self._merged_lanes += int(entries.size)
@@ -321,6 +376,8 @@ class QueryScheduler:
                 xs = np.concatenate([r.xs for r in rounds])
                 self._merged_lanes += int(lids.size)
                 vals = np.asarray(eng.dispatch_round(lids, xs, algo))
+            for k in _LANE_KEYS:
+                self._lane_totals[k] += eng.lane_stats[k] - lane_snap[k]
             off = 0
             for fl, r in zip(fls, rounds):
                 seg = vals[off:off + r.size]
@@ -337,6 +394,8 @@ class QueryScheduler:
                     if first_err is None:
                         first_err = e
         self._running = [fl for fl in self._running if not fl.done]
+        for res, before in pf_res.values():
+            self.prefetch_useful += res.prefetch_useful - before
         if first_err is not None:
             raise first_err
         # background merge BETWEEN rounds: at most one generational
@@ -344,7 +403,94 @@ class QueryScheduler:
         # segment-set snapshots, so this never blocks or perturbs them
         if self.segmented is not None:
             self.segmented.maybe_compact()
-        return len(self._running) + len(self._queue)
+        left = len(self._running) + len(self._queue)
+        if left == 0:
+            # drained: join the tail prefetch so no thread outlives the
+            # workload (and its pages still land for the next burst)
+            self._join_prefetch()
+        return left
+
+    # -- overlapped prefetch (DESIGN.md §13.3) -------------------------------
+
+    def _launch_prefetch(self, groups) -> None:
+        """Predict the NEXT tick's page working set and start its store
+        gather on a background thread.  Predictions: (a) the full list
+        spans of every round dispatched THIS tick — continuations re-probe
+        the same lists at advanced frontiers; (b) the term bags of
+        queued-but-unstarted machines — their first rounds probe those
+        lists.  The thread only runs read-only ``store.gather`` calls
+        into staging arrays; all pool mutation happens at join time on
+        the main thread (``ResidentSet.admit_prefetched``)."""
+        if self._pf_thread is not None:     # never two threads in flight
+            return
+        per_eng: dict[int, tuple[object, set]] = {}
+        for _gkey, (eng, fls) in groups.items():
+            if getattr(eng, "resident", None) is None:
+                continue
+            terms = per_eng.setdefault(id(eng), (eng, set()))[1]
+            for fl in fls:
+                r = fl.pending
+                if isinstance(r, ProbeRound):
+                    terms.update(int(t) for t in np.unique(
+                        np.asarray(r.list_ids)).tolist())
+                elif fl.terms:
+                    terms.update(int(t) for t in fl.terms)
+        for fl in self._queue:
+            eng = fl.engine
+            if getattr(eng, "resident", None) is None or not fl.terms:
+                continue
+            terms = per_eng.setdefault(id(eng), (eng, set()))[1]
+            terms.update(int(t) for t in fl.terms)
+        jobs: list[tuple[object, np.ndarray]] = []
+        seen_res: set[int] = set()
+        for eng, terms in per_eng.values():
+            res = eng.resident
+            if id(res) in seen_res:     # device+host fallback share pools
+                continue
+            seen_res.add(id(res))
+            pages = eng.span_pages(terms)
+            missing = res.peek_missing(pages, cap=max(1, res.budget // 2))
+            if missing.size:
+                jobs.append((res, missing))
+        if not jobs:
+            return
+        self._pf_jobs = jobs
+        self._pf_results = [None] * len(jobs)
+
+        def _gather(jobs=jobs, out=self._pf_results):
+            t0 = time.perf_counter()
+            for i, (res, pages) in enumerate(jobs):
+                out[i] = res.store.gather(pages)
+            self._pf_gather_s = time.perf_counter() - t0
+
+        self._pf_thread = threading.Thread(target=_gather, daemon=True,
+                                           name="repro-prefetch")
+        self._pf_thread.start()
+
+    def _join_prefetch(self) -> None:
+        """Join the in-flight prefetch gather (if any) and admit its
+        pages — the ONLY place prefetched data enters a pool, always on
+        the main thread, always before the tick touches any slot."""
+        if self._pf_thread is None:
+            return
+        t0 = time.perf_counter()
+        self._pf_thread.join()
+        waited = time.perf_counter() - t0
+        self._pf_thread = None
+        gathered = self._pf_gather_s
+        self.prefetch_gather_ms += gathered * 1e3
+        self.prefetch_join_wait_ms += waited * 1e3
+        # the slice of the gather that ran while the main thread was
+        # still dispatching — the fault stall the overlap removed
+        self.overlap_ms += max(0.0, gathered - waited) * 1e3
+        for (res, pages), staged in zip(self._pf_jobs, self._pf_results):
+            if staged is None:
+                continue
+            syms, sums = staged
+            self.prefetched_pages += res.admit_prefetched(pages, syms,
+                                                          sums)
+        self._pf_jobs = []
+        self._pf_results = []
 
     def _advance(self, fl: _InFlight, value, *, start: bool = False) -> None:
         """Run one machine until it blocks on a ProbeRound (parked for the
@@ -496,6 +642,8 @@ class QueryScheduler:
             qps = (len(spans) / elapsed) if elapsed > 1e-9 else 0.0
         else:
             qps = 0.0
+        lt = self._lane_totals
+        memo_total = lt["memo_hits"] + lt["memo_misses"]
         return {
             "completed": self._completed,
             "failures": self.failures,
@@ -506,6 +654,33 @@ class QueryScheduler:
             "p95_ms": float(np.percentile(lat, 95) * 1e3) if lat.size else 0.0,
             "dispatches": self._dispatches,
             "merged_lanes": self._merged_lanes,
+            # merged-round lane accounting (DESIGN.md §13.4): real lanes
+            # are what queries asked for, unique lanes what survived
+            # dedup, pad lanes the pow2 filler — reported separately so
+            # no factor ever counts padding as work.  ``dedup_factor`` is
+            # real work per dispatched unique lane; ``memo_hit_rate`` the
+            # fraction of unique lanes served without touching a backend.
+            "real_lanes": lt["real_lanes"],
+            "unique_lanes": lt["unique_lanes"],
+            "pad_lanes": lt["pad_lanes"],
+            "dispatched_lanes": lt["dispatched_lanes"],
+            "dedup_factor": (lt["real_lanes"] / lt["unique_lanes"]
+                             if lt["unique_lanes"] else 0.0),
+            "memo_hits": lt["memo_hits"],
+            "memo_misses": lt["memo_misses"],
+            "memo_hit_rate": (lt["memo_hits"] / memo_total
+                              if memo_total else 0.0),
+            "probe_memo": getattr(self._engine, "_probe_memo",
+                                  LRUCache(0)).stats(),
+            # overlapped prefetch (DESIGN.md §13.3)
+            "prefetch_enabled": self.prefetch,
+            "prefetched_pages": self.prefetched_pages,
+            "prefetch_useful": self.prefetch_useful,
+            "prefetch_accuracy": (self.prefetch_useful
+                                  / max(self.prefetched_pages, 1)),
+            "prefetch_gather_ms": self.prefetch_gather_ms,
+            "prefetch_join_wait_ms": self.prefetch_join_wait_ms,
+            "overlap_ms": self.overlap_ms,
             "pages_scored": self.pages_scored,
             "pages_skipped": self.pages_skipped,
             "pages_skipped_frac": (
@@ -522,6 +697,10 @@ class QueryScheduler:
                 getattr(self._engine, "codec_dispatches", {})),
             "decode_cache": self.decode_cache.stats(),
             "result_cache": self.result_cache.stats(),
+            # the live engine's own decoded-list LRU (the layer under the
+            # scheduler's decode cache) — hit rates for ALL caches
+            "engine_decode_cache": getattr(self._engine, "_decoded",
+                                           LRUCache(0)).stats(),
             # out-of-core admission cache (DESIGN.md §11.5): zeros when
             # the live engine serves fully resident
             **self._store_stats(),

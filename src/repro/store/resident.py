@@ -80,6 +80,13 @@ class ResidentSet:
         self.lookups = 0
         self.hits = 0
         self._window: deque[bool] = deque(maxlen=_WINDOW)
+        # overlapped-prefetch telemetry (DESIGN.md §13.3): pages admitted
+        # speculatively, how many were later demanded, and the ids still
+        # waiting to prove useful (consumed by ``ensure`` on first demand)
+        self.prefetched_pages = 0
+        self.prefetch_useful = 0
+        self.prefetch_bytes = 0
+        self._prefetch_outstanding: set[int] = set()
         # lazy device mirror: full upload once, then incremental scatters
         self._dev = None
         self._pending: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
@@ -98,7 +105,11 @@ class ResidentSet:
         slots = self.slot_of_page[pages]
         hit = slots >= 0
         for p in pages[hit]:
-            self._lru.move_to_end(int(p))
+            p = int(p)
+            self._lru.move_to_end(p)
+            if p in self._prefetch_outstanding:
+                self._prefetch_outstanding.discard(p)
+                self.prefetch_useful += 1
         n_hit = int(hit.sum())
         self.lookups += int(pages.size)
         self.hits += n_hit
@@ -156,6 +167,68 @@ class ResidentSet:
         self._dev = None            # pool shape changed: full re-upload
         self._pending.clear()
         self._slots_dirty = True
+
+    # -- overlapped prefetch (DESIGN.md §13.3) ---------------------------
+
+    def peek_missing(self, pages, cap: int | None = None) -> np.ndarray:
+        """Read-only snapshot of which of ``pages`` are NOT resident —
+        the prefetch job the scheduler hands to its background thread.
+        Never mutates the pool, never counts toward hit-rate telemetry
+        (speculative lookups would poison the demand hit rate)."""
+        pages = np.unique(np.asarray(pages, np.int64).reshape(-1))
+        pages = pages[(pages >= 0) & (pages < self.store.num_pages)]
+        missing = pages[self.slot_of_page[pages] < 0]
+        if cap is not None and missing.size > int(cap):
+            missing = missing[:int(cap)]
+        return missing
+
+    def admit_prefetched(self, pages: np.ndarray, syms: np.ndarray,
+                         sums: np.ndarray) -> int:
+        """Admit pages whose rows were gathered by the prefetch thread.
+        MAIN-THREAD ONLY: the background thread does the (read-only)
+        ``store.gather``; every pool mutation happens here, after the
+        scheduler joins the thread (DESIGN.md §13.3 thread contract).
+
+        Speculative admission is strictly best-effort: pages that became
+        resident since the ``peek_missing`` snapshot are skipped, the
+        pool NEVER grows for a prediction, and eviction pressure is
+        bounded to the oldest half of the LRU so a bad prediction can't
+        flush the demand-proven hot set.  Returns the admitted count."""
+        pages = np.asarray(pages, np.int64).reshape(-1)
+        still = self.slot_of_page[pages] < 0
+        if not still.all():
+            pages, syms, sums = pages[still], syms[still], sums[still]
+        if pages.size == 0:
+            return 0
+        max_evict = len(self._lru) // 2
+        limit = len(self._free) + max_evict
+        if pages.size > limit:
+            pages, syms, sums = (pages[:limit], syms[:limit],
+                                 sums[:limit])
+        if pages.size == 0:
+            return 0
+        alloc: list[int] = []
+        while len(alloc) < pages.size and self._free:
+            alloc.append(self._free.pop())
+        if len(alloc) < pages.size:
+            for p in list(self._lru):            # oldest first
+                if len(alloc) >= pages.size:
+                    break
+                alloc.append(self._lru.pop(p))
+                self.slot_of_page[p] = -1
+                self.page_evictions += 1
+        new_slots = np.asarray(alloc, np.int64)
+        self.pool_syms[new_slots] = syms
+        self.pool_sums[new_slots] = sums
+        self.slot_of_page[pages] = new_slots.astype(np.int32)
+        for p, sl in zip(pages, new_slots):
+            self._lru[int(p)] = int(sl)
+            self._prefetch_outstanding.add(int(p))
+        self.prefetched_pages += int(pages.size)
+        self.prefetch_bytes += int(pages.size) * self.store.page_size * 8
+        self._pending.append((new_slots.copy(), syms, sums))
+        self._slots_dirty = True
+        return int(pages.size)
 
     # -- addressing ------------------------------------------------------
 
@@ -230,4 +303,7 @@ class ResidentSet:
                     pool_grows=self.pool_grows,
                     lookups=self.lookups,
                     hits=self.hits,
-                    hit_rate_window=self.hit_rate_window())
+                    hit_rate_window=self.hit_rate_window(),
+                    prefetched_pages=self.prefetched_pages,
+                    prefetch_useful=self.prefetch_useful,
+                    prefetch_bytes=self.prefetch_bytes)
